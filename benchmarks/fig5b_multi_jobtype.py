@@ -1,0 +1,48 @@
+"""Fig 5(b): a tenant adds a second job type mid-run (40th minute); under
+weighted OEF both of the tenant's types get equal throughput, each half of
+the other tenants' share."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import oef
+from repro.core.types import ClusterSpec, JobTypeProfile, Tenant
+from .common import timed
+
+CLUSTER = ClusterSpec(types=("rtx3070", "rtx3080", "rtx3090"), m=(8, 8, 8))
+VEC = {
+    "lstm": (1.0, 1.62, 2.15),
+    "vgg": (1.0, 1.22, 1.39),
+    "rnn": (1.0, 1.48, 1.86),
+    "transformer": (1.0, 1.55, 1.98),
+}
+
+
+def run() -> list:
+    rows = []
+    tenants0 = [
+        Tenant("u1", (JobTypeProfile("lstm", VEC["lstm"]),)),
+        Tenant("u2", (JobTypeProfile("vgg", VEC["vgg"]),)),
+        Tenant("u3", (JobTypeProfile("rnn", VEC["rnn"]),)),
+        Tenant("u4", (JobTypeProfile("transformer", VEC["transformer"]),)),
+    ]
+    ta0, us0 = timed(lambda: oef.evaluate_tenants(tenants0, CLUSTER, mode="noncooperative"))
+    tps0 = [ta0.tenant_throughput(t.name, {jt.name: np.asarray(jt.speedup) for jt in t.job_types})
+            for t in tenants0]
+    rows.append(("fig5b/before_new_jobtype", us0,
+                 f"equal_across={'Y' if np.ptp(tps0) < 1e-6 else 'N'} tp={tps0[0]:.3f}"))
+
+    # at minute 40 user-1 submits a second type (transformer)
+    tenants1 = [
+        Tenant("u1", (JobTypeProfile("lstm", VEC["lstm"]),
+                      JobTypeProfile("transformer", VEC["transformer"]))),
+    ] + tenants0[1:]
+    ta1, us1 = timed(lambda: oef.evaluate_tenants(tenants1, CLUSTER, mode="noncooperative"))
+    tp_lstm = float(np.dot(VEC["lstm"], ta1.per_job_type["u1"]["lstm"]))
+    tp_tr = float(np.dot(VEC["transformer"], ta1.per_job_type["u1"]["transformer"]))
+    tp_u2 = ta1.tenant_throughput("u2", {"vgg": np.asarray(VEC["vgg"])})
+    rows.append(("fig5b/after_new_jobtype", us1,
+                 f"u1_types_equal={'Y' if abs(tp_lstm-tp_tr) < 1e-5 else 'N'} "
+                 f"each_half_of_u2={'Y' if abs(tp_lstm - tp_u2/2) < 1e-5 else 'N'} "
+                 f"({tp_lstm:.3f} vs u2 {tp_u2:.3f})"))
+    return rows

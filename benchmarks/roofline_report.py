@@ -1,0 +1,98 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--mesh singlepod]
+Reads artifacts/dryrun/*.json; prints a markdown table plus hillclimb-target
+ranking (worst roofline fraction / most collective-bound).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["yi-9b", "gemma3-4b", "qwen2-1.5b", "phi4-mini-3.8b", "xlstm-350m",
+              "kimi-k2-1t-a32b", "arctic-480b", "whisper-tiny", "recurrentgemma-2b",
+              "phi-3-vision-4.2b"]
+
+
+def load(mesh: str, tag: str = "") -> List[Dict]:
+    recs = []
+    suffix = f"_{tag}" if tag else ""
+    for f in glob.glob(os.path.join(ARTIFACTS, f"*__{mesh}{suffix}.json")):
+        base = os.path.basename(f)
+        if not tag and base.count("__") != 2:
+            continue  # skip tagged perf-experiment artifacts in baseline table
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    def key(r):
+        arch = r["arch"].replace("_", ".")
+        a = ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99
+        s = SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 99
+        return (a, s)
+    return sorted(recs, key=key)
+
+
+def fraction(r: Dict) -> float:
+    """Roofline fraction: ideal compute time (MODEL_FLOPS at peak) over the
+    dominant-term step time — 'how close to the compute roofline'."""
+    ro = r["roofline"]
+    ideal = ro["model_flops_total"] / (r["n_chips"] * 197e12)
+    return ideal / max(ro["step_time_s_max_term"], 1e-12)
+
+
+def table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | status | compute s | memory s | collective s | bottleneck | "
+        "fraction | useful | mem/dev GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "OK":
+            reason = r.get("reason", r.get("error", ""))[:48]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                         f"| — | — | — | — | — | — | — | {reason} |")
+            continue
+        ro = r["roofline"]
+        ma = r["memory_analysis"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} | {ro['collective_s']:.3f} "
+            f"| {ro['bottleneck'].replace('_s','')} | {fraction(r)*100:.1f}% "
+            f"| {ro['useful_flops_ratio']:.2f} "
+            f"| {ma['peak_bytes_per_device']/2**30:.2f} "
+            f"| {'Y' if ma.get('fits_hbm') else 'N'} |")
+    return "\n".join(lines)
+
+
+def ranking(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r["status"] == "OK"]
+    by_frac = sorted(ok, key=fraction)[:5]
+    by_coll = sorted(ok, key=lambda r: -r["roofline"]["collective_s"])[:5]
+    out = ["worst roofline fraction:"]
+    out += [f"  {r['arch']} {r['shape']}: {fraction(r)*100:.2f}%" for r in by_frac]
+    out += ["most collective-bound:"]
+    out += [f"  {r['arch']} {r['shape']}: coll={r['roofline']['collective_s']:.2f}s"
+            for r in by_coll]
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="singlepod", choices=["singlepod", "multipod"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--rank", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.tag)
+    print(table(recs))
+    if args.rank:
+        print()
+        print(ranking(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Inject generated roofline tables into EXPERIMENTS.md placeholders.
+
+Usage: PYTHONPATH=src python -m benchmarks.update_experiments
+Replaces <!-- ROOFLINE_TABLE_SINGLEPOD --> and <!-- ROOFLINE_TABLE_MULTIPOD -->
+(idempotent: regenerates between marker and the following blank-line+header).
+"""
+from __future__ import annotations
+
+import os
+import re
+
+from .roofline_report import load, ranking, table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+MARKERS = {
+    "singlepod": "<!-- ROOFLINE_TABLE_SINGLEPOD -->",
+    "multipod": "<!-- ROOFLINE_TABLE_MULTIPOD -->",
+}
+
+
+def main() -> None:
+    text = open(EXP).read()
+    for mesh, marker in MARKERS.items():
+        recs = load(mesh)
+        block = marker + "\n" + table(recs)
+        if mesh == "singlepod":
+            block += "\n\n```\n" + ranking(recs) + "\n```"
+        # replace marker plus any previously injected table (up to next header)
+        pattern = re.escape(marker) + r"(?:\n(?:\|[^\n]*\n?)*)?(?:\n```[\s\S]*?```)?"
+        text = re.sub(pattern, block, text, count=1)
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

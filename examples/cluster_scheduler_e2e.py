@@ -1,0 +1,72 @@
+"""End-to-end driver: the OEF scheduler allocating a heterogeneous TPU fleet
+across tenants running REAL JAX training jobs.
+
+Three tenants train different architectures (reduced configs on CPU). Each
+scheduling round:
+  1. the ProfilingAgent derives each job's speedup vector across the fleet
+     from its analytic roofline costs (§4.1 adaptation — on real hardware
+     this is a measured mini-batch run);
+  2. the OEF fair-share evaluator solves the cooperative allocation;
+  3. the rounding placer converts shares to whole devices;
+  4. every tenant's Trainer executes a number of optimizer steps proportional
+     to its granted device-throughput (device-seconds x speedup), then
+     checkpoints — an allocation change is an elastic resize + restore.
+
+Run:  PYTHONPATH=src python examples/cluster_scheduler_e2e.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import ClusterSpec, JobTypeProfile, ProfilingAgent, Tenant, WorkloadCost
+from repro.core import oef
+from repro.core.placement import RoundingPlacer
+from repro.models.config import ShapeCell
+from repro.models.costs import model_flops, param_bytes
+from repro.runtime import Trainer, TrainerConfig
+
+FLEET_CLUSTER = ClusterSpec(types=("tpu-v5e", "tpu-v4", "tpu-v5p", "tpu-v6e"),
+                            m=(8, 8, 4, 4))
+ROUND_SECONDS = 60.0
+N_ROUNDS = 3
+STEPS_PER_UNIT = 2  # training steps per granted device-throughput unit
+
+
+def main() -> None:
+    agent = ProfilingAgent()
+    arch_names = ["qwen2-1.5b", "gemma3-4b", "xlstm-350m"]
+    tenants, trainers = [], {}
+    cell = ShapeCell("train_small", "train", 128, 4)
+    for name in arch_names:
+        cfg = get_smoke(name)
+        # analytic profile: per-step flops & bytes of this tenant's job
+        cost = WorkloadCost(name=name, flops=model_flops(cfg, cell) / 4,
+                            hbm_bytes=float(param_bytes(cfg)) * 3 + 1e9 * 0.1)
+        profile = agent.profile(cost)
+        tenants.append(Tenant(name=name, job_types=(profile,)))
+        trainers[name] = Trainer(cfg, TrainerConfig(
+            seq_len=64, global_batch=4, total_steps=500,
+            ckpt_dir=tempfile.mkdtemp(prefix=f"oef-{name}-"), ckpt_every=10))
+        print(f"tenant {name}: speedup vector "
+              f"{np.round(np.asarray(profile.speedup), 3)}")
+
+    placer = RoundingPlacer(len(tenants), FLEET_CLUSTER.m)
+    for rnd in range(N_ROUNDS):
+        ta = oef.evaluate_tenants(tenants, FLEET_CLUSTER, mode="cooperative")
+        real = placer.round_shares(ta.X)
+        print(f"\n-- round {rnd}: fractional shares\n{np.round(ta.X, 2)}")
+        print(f"   integer grants\n{real}")
+        for ti, tenant in enumerate(tenants):
+            speedups = np.asarray(tenant.job_types[0].speedup)
+            throughput_units = float(np.dot(speedups, real[ti]))
+            steps = max(1, int(throughput_units * STEPS_PER_UNIT))
+            out = trainers[tenant.name].run(steps)
+            print(f"   {tenant.name}: {steps} steps "
+                  f"(granted units {throughput_units:.2f}), "
+                  f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    print("\nall tenants trained under OEF allocations; checkpoints on disk.")
+
+
+if __name__ == "__main__":
+    main()

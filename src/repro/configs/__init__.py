@@ -1,0 +1,62 @@
+"""Assigned architecture configs (exact) + reduced smoke variants.
+
+``get_config(name)`` returns the full assigned config; ``get_smoke(name)``
+returns a reduced same-family variant for CPU tests (small depth/width, few
+experts, tiny vocab). ``ALL_ARCHS`` lists the 10 assigned ids.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ArchConfig
+
+ALL_ARCHS: List[str] = [
+    "yi_9b",
+    "gemma3_4b",
+    "qwen2_1_5b",
+    "phi4_mini_3_8b",
+    "xlstm_350m",
+    "kimi_k2_1t_a32b",
+    "arctic_480b",
+    "whisper_tiny",
+    "recurrentgemma_2b",
+    "phi_3_vision_4_2b",
+]
+
+# canonical dashed ids from the assignment -> module names
+ALIASES: Dict[str, str] = {
+    "yi-9b": "yi_9b",
+    "gemma3-4b": "gemma3_4b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "xlstm-350m": "xlstm_350m",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "arctic-480b": "arctic_480b",
+    "whisper-tiny": "whisper_tiny",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+}
+
+
+def _module(name: str):
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(name: str, **overrides) -> ArchConfig:
+    cfg = _module(name).CONFIG
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke(name: str, **overrides) -> ArchConfig:
+    cfg = _module(name).SMOKE
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg

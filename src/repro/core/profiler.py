@@ -1,0 +1,115 @@
+"""Profiling agent (§4.1): produces per-tenant speedup vectors.
+
+The paper profiles each job type with a short measured run on every GPU type.
+This container has no accelerators, so the default mode is *analytic*: step
+time on device type ``d`` is estimated with a two-term roofline
+
+    t_step(d) = max( flops / peak_flops(d),  bytes / hbm_bw(d) )
+                + collective_bytes / ici_bw(d)
+
+where flops/bytes come either from the compiled dry-run's
+``cost_analysis()`` (see ``repro.launch.dryrun``) or from the analytic
+per-architecture cost model in ``repro.models.costs``. The *measured* mode
+accepts user-supplied throughputs unchanged — the scheduler interface is
+identical (as in the paper, tenants are responsible for the profiling task).
+
+Profiling-error robustness (Fig 10b) is modeled by multiplicative noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .types import DeviceTypeSpec, JobTypeProfile, TPU_FLEET
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadCost:
+    """Per-step cost terms of one job type (single-device granularity)."""
+
+    name: str
+    flops: float  # FLOPs per device-step
+    hbm_bytes: float  # HBM traffic per device-step
+    collective_bytes: float = 0.0  # per-device collective payload per step
+    min_demand: int = 1
+
+
+def step_time(cost: WorkloadCost, dev: DeviceTypeSpec) -> float:
+    compute = cost.flops / (dev.peak_tflops * 1e12)
+    memory = cost.hbm_bytes / (dev.hbm_gbps * 1e9)
+    comm = cost.collective_bytes / (dev.ici_gbps * 1e9)
+    return max(compute, memory) + comm
+
+
+class ProfilingAgent:
+    """Builds speedup vectors across a heterogeneous fleet (§4.1)."""
+
+    def __init__(
+        self,
+        fleet: Sequence[DeviceTypeSpec] = TPU_FLEET,
+        *,
+        error_pct: float = 0.0,
+        seed: int = 0,
+    ) -> None:
+        self.fleet = tuple(fleet)
+        self.error_pct = float(error_pct)
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def type_names(self) -> Tuple[str, ...]:
+        return tuple(d.name for d in self.fleet)
+
+    def throughputs(self, cost: WorkloadCost) -> Array:
+        """Raw throughput (steps/s) on every fleet type, with optional noise."""
+        tp = np.array([1.0 / step_time(cost, d) for d in self.fleet])
+        if self.error_pct > 0:
+            noise = 1.0 + self._rng.uniform(-self.error_pct, self.error_pct, size=tp.shape)
+            tp = tp * noise
+        return tp
+
+    def profile(self, cost: WorkloadCost) -> JobTypeProfile:
+        """Speedup vector normalized to the *slowest* type (paper §2.3)."""
+        tp = self.throughputs(cost)
+        slowest = int(np.argmin(tp))
+        if slowest != 0:
+            # The paper assumes a consistent slowest type (its footnote 1);
+            # we normalize to whatever is slowest for this workload and keep
+            # fleet order — OEF's LPs do not require monotone columns.
+            pass
+        speedup = tp / tp.min()
+        return JobTypeProfile(name=cost.name, speedup=tuple(float(s) for s in speedup),
+                              min_demand=cost.min_demand)
+
+    def profile_measured(self, name: str, measured_tp: Mapping[str, float],
+                         *, min_demand: int = 1) -> JobTypeProfile:
+        tp = np.array([measured_tp[d.name] for d in self.fleet], dtype=np.float64)
+        speedup = tp / tp.min()
+        return JobTypeProfile(name=name, speedup=tuple(float(s) for s in speedup),
+                              min_demand=min_demand)
+
+
+# ---------------------------------------------------------------------------
+# Paper workloads (Fig. 1): measured speedups on RTX 3070/3080/3090.
+# VGG reaches 1.39x on 3090, LSTM 2.15x (both quoted in §2.2); the others are
+# representative interpolations of the same figure used by the benchmarks.
+# ---------------------------------------------------------------------------
+
+PAPER_GPU_TYPES: Tuple[str, ...] = ("rtx3070", "rtx3080", "rtx3090")
+
+PAPER_WORKLOAD_SPEEDUPS: Dict[str, Tuple[float, float, float]] = {
+    "vgg": (1.0, 1.22, 1.39),
+    "resnet": (1.0, 1.28, 1.55),
+    "densenet": (1.0, 1.18, 1.31),
+    "lstm": (1.0, 1.62, 2.15),
+    "rnn": (1.0, 1.48, 1.86),
+    "transformer": (1.0, 1.55, 1.98),
+}
+
+
+def paper_job_type(name: str, *, min_demand: int = 1) -> JobTypeProfile:
+    return JobTypeProfile(name=name, speedup=PAPER_WORKLOAD_SPEEDUPS[name],
+                          min_demand=min_demand)

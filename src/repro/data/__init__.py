@@ -1,0 +1,1 @@
+from .pipeline import SyntheticTokens, batch_iterator, make_batch  # noqa: F401

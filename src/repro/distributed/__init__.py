@@ -1,0 +1,6 @@
+from .sharding import (  # noqa: F401
+    MeshShape,
+    ShardingPlan,
+    make_plan,
+    spec_to_sharding,
+)

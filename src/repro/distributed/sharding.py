@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) for the model zoo.
+
+Production meshes are fixed — single-pod ``(data=16, model=16)`` or multi-pod
+``(pod=2, data=16, model=16)`` — but *how* each architecture uses the axes is
+chosen per-config here, with divisibility-aware fallbacks (GSPMD's
+``with_sharding_constraint`` tolerates uneven dims, but jit in/out shardings
+do not, so parameter and cache specs must always divide):
+
+  - batch           -> ("pod", "data")   [pure DP across pods]
+  - attention heads -> "model" when n_(kv_)heads % model == 0 (head TP),
+                       else Megatron-style *sequence parallelism*: the query
+                       sequence dim is sharded on "model" for attention and
+                       re-sharded for FFN (SP mode);
+  - d_ff / experts / vocab -> "model" (TP / EP; vocab padded to a multiple of
+    256 so every assigned arch divides);
+  - d_model on parameters -> "data" (FSDP / ZeRO-3: params, grads and
+    optimizer state all carry the same spec);
+  - KV-cache sequence dim -> "model" (decode-time sequence parallelism —
+    always divisible for the assigned shapes).
+
+``ShardingPlan.constrain`` is a no-op when no mesh is supplied, so model code
+runs unchanged in single-device CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshShape:
+    """Named mesh geometry; `data_axes` may span ("pod", "data")."""
+
+    data_axes: Tuple[str, ...]
+    model_axis: str
+    sizes: dict
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.sizes[a] for a in self.data_axes]))
+
+    @property
+    def model_size(self) -> int:
+        return int(self.sizes[self.model_axis])
+
+
+def mesh_shape_of(mesh: Mesh) -> MeshShape:
+    names = tuple(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    model_axis = "model" if "model" in names else names[-1]
+    data_axes = tuple(a for a in names if a != model_axis)
+    return MeshShape(data_axes=data_axes, model_axis=model_axis, sizes=sizes)
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    """Resolves logical tensor dims to mesh axes for one (config, mesh)."""
+
+    mesh: Optional[Mesh]
+    shape: Optional[MeshShape]
+    attn_mode: str  # "head_tp" | "seq_tp" | "ddp"
+    kv_heads_sharded: bool
+    heads_sharded: bool
+    # ddp mode: True when the global batch does NOT cover the model axis, so
+    # sequences shard over it instead (e.g. batch 256 on the 512-chip
+    # multi-pod mesh). Resolved at plan build from the cell's global batch.
+    ddp_seq_over_model: bool = False
+
+    # ---- logical dim -> axis spec (divisibility already resolved) ----
+    def batch(self, size: int) -> AxisSpec:
+        if self.shape is None:
+            return None
+        axes = []
+        rem = size
+        cand = list(self.shape.data_axes)
+        if self.attn_mode == "ddp":
+            cand.append(self.shape.model_axis)  # pure DP over every axis
+        for a in cand:
+            s = self.shape.sizes[a]
+            if rem % s == 0:
+                axes.append(a)
+                rem //= s
+            else:
+                break
+        return tuple(axes) if axes else None
+
+    def model_dim(self, size: int) -> AxisSpec:
+        """TP axis for d_ff / experts / padded vocab / flattened head dims."""
+        if self.shape is None or self.attn_mode == "ddp":
+            return None
+        return self.shape.model_axis if size % self.shape.model_size == 0 else None
+
+    def fsdp_dim(self, size: int) -> AxisSpec:
+        """FSDP axis for the d_model dim of parameters."""
+        if self.shape is None:
+            return None
+        # Use the innermost data axis only (pod axis stays pure-DP so that
+        # cross-pod traffic is gradient all-reduce, not param all-gathers).
+        a = self.shape.data_axes[-1]
+        return a if size % self.shape.sizes[a] == 0 else None
+
+    def heads(self, n: int) -> AxisSpec:
+        if self.shape is None or self.attn_mode != "head_tp":
+            return None
+        return self.shape.model_axis if n % self.shape.model_size == 0 else None
+
+    def seq(self, size: int) -> AxisSpec:
+        """Sequence-parallel axis (SP mode activations / KV cache seq dim)."""
+        if self.shape is None:
+            return None
+        if self.attn_mode == "ddp" and not self.ddp_seq_over_model:
+            return None
+        return self.shape.model_axis if size % self.shape.model_size == 0 else None
+
+    # ---- constraint helpers ----
+    def spec(self, *dims: AxisSpec) -> P:
+        return P(*dims)
+
+    def constrain(self, x, *dims: AxisSpec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*dims)))
+
+    def sharding(self, *dims: AxisSpec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*dims))
+
+
+def make_plan(mesh: Optional[Mesh], *, n_heads: int, n_kv_heads: int,
+              prefer: str = "auto", global_batch: Optional[int] = None) -> ShardingPlan:
+    """``prefer``:
+      - "auto"/"seq": context-parallel ZeRO-3 — activations stay
+        (batch, seq/model) sharded end-to-end; K/V and weights are gathered
+        at use (K/V are small under GQA). Default baseline: minimizes both
+        saved-activation memory and collective volume for every assigned arch.
+      - "head": Megatron head-TP attention + d_ff TP (requires n_heads %
+        model == 0); residual stream still seq-sharded between layers. A
+        §Perf comparator — trades weight gathers for activation gathers.
+      - "ddp": pure data parallelism over EVERY mesh axis (batch spans pod x
+        data x model; params replicated — pair with ``fsdp=False``). The
+        right choice for small archs where FSDP gathers dominate (§Perf).
+    """
+    if mesh is None:
+        return ShardingPlan(None, None, attn_mode="seq_tp", kv_heads_sharded=False,
+                            heads_sharded=False)
+    shape = mesh_shape_of(mesh)
+    heads_ok = n_heads % shape.model_size == 0
+    kv_ok = n_kv_heads % shape.model_size == 0
+    if prefer == "ddp":
+        attn_mode = "ddp"
+    else:
+        attn_mode = "head_tp" if (prefer == "head" and heads_ok) else "seq_tp"
+    seq_over_model = False
+    if attn_mode == "ddp" and global_batch is not None:
+        # Does the greedy batch sharding reach/cover the model axis? If not,
+        # the model axis would sit idle — give it to the sequence dim.
+        rem = global_batch
+        covered = True
+        for a in shape.data_axes:
+            if rem % shape.sizes[a] == 0:
+                rem //= shape.sizes[a]
+            else:
+                covered = False
+                break
+        seq_over_model = not (covered and rem % shape.model_size == 0)
+    return ShardingPlan(mesh, shape, attn_mode=attn_mode,
+                        kv_heads_sharded=kv_ok and attn_mode == "head_tp",
+                        heads_sharded=heads_ok and attn_mode == "head_tp",
+                        ddp_seq_over_model=seq_over_model)
+
+
+def spec_to_sharding(mesh: Optional[Mesh], spec: P) -> Optional[NamedSharding]:
+    return None if mesh is None else NamedSharding(mesh, spec)

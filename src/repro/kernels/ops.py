@@ -1,0 +1,54 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on TPU
+the same calls lower to Mosaic. ``INTERPRET`` is derived from the backend at
+import time and overridable for tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rglru_scan as _rg
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """(B, H, S, D) flash attention. GQA: repeat KV heads in the caller or use
+    :func:`flash_attention_gqa`."""
+    it = INTERPRET if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k, interpret=it)
+
+
+def flash_attention_gqa(q, k, v, **kw) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hq % Hkv == 0."""
+    Hq, Hkv = q.shape[1], k.shape[1]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return flash_attention(q, k, v, **kw)
+
+
+def rglru_scan(a, b, h0, *, block_d: int = 128, interpret: bool | None = None) -> jnp.ndarray:
+    it = INTERPRET if interpret is None else interpret
+    D = a.shape[-1]
+    bd = block_d
+    while D % bd:
+        bd //= 2
+    return _rg.rglru_scan(a, b, h0, block_d=bd, interpret=it)
+
+
+def softmax_xent(logits, targets, *, block_n: int = 128, block_v: int = 2048,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Fused cross-entropy over (N, V) logits; returns per-token loss (N,)."""
+    from . import xent as _xent
+
+    it = INTERPRET if interpret is None else interpret
+    return _xent.softmax_xent(logits, targets, block_n=block_n, block_v=block_v,
+                              interpret=it)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the mathematical specification; kernel tests sweep
+shapes/dtypes and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int | None = None) -> jnp.ndarray:
+    """Naive softmax attention. q,k,v: (B, H, S, D) -> (B, H, S, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    Sq, Sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    diff = qpos - kpos
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """Sequential linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, D); h0: (B, D). Returns h: (B, S, D)."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+def xent_ref(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-token cross-entropy: logsumexp(logits) - logits[target]. (N, V)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return logz - gold
+
+
+def mlstm_recurrent_ref(q, k, v, i_gate, log_f):
+    """Step-by-step mLSTM recurrence oracle (validates the chunkwise form).
+
+    q,k,v: (B, S, H, D); i_gate/log_f: (B, S, H). Returns h: (B, S, H, D).
+    C_t = f_t C_{t-1} + i_t k_t v_t^T ; n_t = f_t n_{t-1} + i_t k_t ;
+    h_t = (q_t . C_t) / max(|q_t . n_t|, 1).
+    """
+    B, S, H, D = q.shape
+
+    def step(carry, xs):
+        C, n = carry
+        qt, kt, vt, it, lft = xs
+        f = jnp.exp(lft)  # (B, H)
+        C = C * f[..., None, None] + jnp.einsum("bhd,bh,bhe->bhde", kt, it, vt)
+        n = n * f[..., None] + kt * it[..., None]
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), 1.0)
+        return (C, n), num / den[..., None]
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    xs = (q.swapaxes(0, 1).astype(jnp.float32), k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32), i_gate.swapaxes(0, 1),
+          log_f.swapaxes(0, 1))
+    _, hs = jax.lax.scan(step, (C0, n0), xs)
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline terms from the compiled artifact.
+
+The two lines above MUST precede any jax import (jax locks the device count
+at first init); this module is the only place they are set — smoke tests and
+benchmarks see the single real CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|...]
+
+Per cell we record: compiled memory_analysis (bytes/device), cost_analysis
+(FLOPs + HBM bytes), the collective schedule parsed from the per-device HLO,
+and the three roofline terms for TPU v5e. Artifacts: artifacts/dryrun/*.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALIASES, ALL_ARCHS, get_config
+from repro.distributed.sharding import make_plan
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.mesh import hardware_constants, make_production_mesh
+from repro.models import cache_specs, input_specs, shape_cell
+from repro.models.config import ArchConfig, SHAPE_CELLS
+from repro.models.model import cache_leaf_spec
+from repro.optim import make_optimizer
+from repro.runtime import TrainState, make_prefill_step, make_serve_step, make_train_step
+from repro.runtime.trainstep import param_specs, state_specs
+from repro.models import init_params
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+DECODE_MARGIN = 128  # decode cache capacity beyond the prefilled context
+
+
+def cell_applicable(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, "long_500k needs sub-quadratic attention (pure full-attention arch)"
+    return True, ""
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), tree, shardings)
+
+
+def _unit_cfg(cfg: ArchConfig, units: int) -> ArchConfig:
+    """Reduced-depth unrolled variant for cost calibration (same pattern,
+    prefix and tail; ``units`` repeating units; scan disabled so XLA's
+    cost_analysis counts every layer)."""
+    n_layers = cfg.first_k_dense + units * len(cfg.pattern) + len(cfg.tail_kinds)
+    return dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False)
+
+
+def _compile_cell(cfg: ArchConfig, cell, mesh, plan):
+    """Lower + compile the step for one cell; returns the compiled artifact."""
+    if cell.kind == "train":
+        okw = {"state_dtype": cfg.opt_state_dtype} if cfg.optimizer == "adamw" else {}
+        optimizer = make_optimizer(cfg.optimizer, **okw)
+        key = jax.random.PRNGKey(0)
+
+        def init_state():
+            p = init_params(cfg, key)
+            return TrainState(p, optimizer.init(p), jnp.zeros((), jnp.int32))
+
+        state_shape = jax.eval_shape(init_state)
+        specs = state_specs(cfg, plan, state_shape)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        state_sds = _sds(state_shape, sh)
+        batch_sds = input_specs(cfg, cell.seq_len, cell.global_batch, "train", plan)
+        fn = make_train_step(cfg, plan, optimizer)
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=0,
+                              out_shardings=(sh, None)).lower(state_sds, batch_sds)
+            compiled = lowered.compile()
+    elif cell.kind == "prefill":
+        params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_specs(cfg, plan, params_shape),
+                           is_leaf=lambda x: isinstance(x, P))
+        params_sds = _sds(params_shape, psh)
+        batch_sds = input_specs(cfg, cell.seq_len, cell.global_batch, "prefill", plan)
+        cache_len = cell.seq_len + DECODE_MARGIN
+        fn = make_prefill_step(cfg, plan, cache_len)
+        cache_shape = jax.eval_shape(fn, params_shape,
+                                     jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                                                  batch_sds))
+        cache_sh = jax.tree.map(
+            lambda l: NamedSharding(mesh, P(*cache_leaf_spec(cfg, plan, l.shape))), cache_shape[0])
+        with mesh:
+            lowered = jax.jit(fn, out_shardings=(cache_sh, None)).lower(params_sds, batch_sds)
+            compiled = lowered.compile()
+    elif cell.kind == "decode":
+        params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_specs(cfg, plan, params_shape),
+                           is_leaf=lambda x: isinstance(x, P))
+        params_sds = _sds(params_shape, psh)
+        cache_len = cell.seq_len + DECODE_MARGIN
+        cache_sds = cache_specs(cfg, plan, cell.global_batch, cache_len)
+        cache_sh = jax.tree.map(lambda l: l.sharding, cache_sds)
+        tok_sds = jax.ShapeDtypeStruct(
+            (cell.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, P(plan.batch(cell.global_batch), None)))
+        fn = make_serve_step(cfg, plan)
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=1,
+                              out_shardings=(cache_sh, None, None)).lower(
+                                  params_sds, cache_sds, tok_sds)
+            compiled = lowered.compile()
+    else:
+        raise ValueError(cell.kind)
+    return compiled
+
+
+def _extract_costs(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "wire": float(coll["wire_bytes_per_device"]),
+        "coll_detail": coll,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None,
+               save_text: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch, **(overrides or {}))
+    cell = shape_cell(shape_name)
+    ok, why = cell_applicable(cfg, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": cfg.name, "shape": shape_name, "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind, "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "overrides": overrides or {},
+    }
+    if not ok:
+        rec["status"] = "SKIP"
+        rec["reason"] = why
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                     prefer=cfg.attn_parallelism, global_batch=cell.global_batch)
+
+    # 1) full-depth compile (scan over layers): the fit/coherence proof and
+    # the true peak-memory numbers.
+    t0 = time.perf_counter()
+    compiled = _compile_cell(cfg, cell, mesh, plan)
+    compile_s = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+
+    # 2) XLA's cost_analysis counts while-loop bodies ONCE, so scanned models
+    # under-report flops/bytes/collectives by the trip count. Calibrate with
+    # two reduced-depth *unrolled* compiles and extrapolate linearly in the
+    # number of scan units: cost(U) = base + U * per_unit.
+    t1 = time.perf_counter()
+    if cfg.n_units > 1:
+        c1 = _extract_costs(_compile_cell(_unit_cfg(cfg, 1), cell, mesh, plan))
+        c2 = _extract_costs(_compile_cell(_unit_cfg(cfg, 2), cell, mesh, plan))
+        U = cfg.n_units
+
+        def extrap(k1: float, k2: float) -> float:
+            per_unit = max(k2 - k1, 0.0)
+            return k1 + (U - 1) * per_unit
+
+        costs = {k: extrap(c1[k], c2[k]) for k in ("flops", "bytes", "transcendentals", "wire")}
+        coll_detail = c2["coll_detail"]
+        per_op = {}
+        for op in set(c1["coll_detail"]["per_op"]) | set(c2["coll_detail"]["per_op"]):
+            d1 = c1["coll_detail"]["per_op"].get(op, {"count": 0, "wire_bytes": 0.0,
+                                                      "operand_bytes": 0.0})
+            d2 = c2["coll_detail"]["per_op"].get(op, {"count": 0, "wire_bytes": 0.0,
+                                                      "operand_bytes": 0.0})
+            per_op[op] = {k: extrap(float(d1[k]), float(d2[k])) for k in
+                          ("count", "wire_bytes", "operand_bytes")}
+        coll_detail = {"per_op": per_op,
+                       "wire_bytes_per_device": costs["wire"],
+                       "n_collectives": extrap(c1["coll_detail"]["n_collectives"],
+                                               c2["coll_detail"]["n_collectives"]),
+                       "calibrated": True}
+    else:
+        cfull = _extract_costs(compiled)
+        costs = {k: cfull[k] for k in ("flops", "bytes", "transcendentals", "wire")}
+        coll_detail = cfull["coll_detail"]
+    calib_s = time.perf_counter() - t1
+
+    n_chips = 512 if multi_pod else 256
+    hw = hardware_constants()
+    flops_dev, bytes_dev, wire_dev = costs["flops"], costs["bytes"], costs["wire"]
+    compute_s = flops_dev / hw["peak_flops"]
+    memory_s = bytes_dev / hw["hbm_gbps"]
+    collective_s = wire_dev / hw["ici_gbps"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    from repro.models.costs import attention_flops, model_flops
+
+    mf = model_flops(cfg, cell)
+    rec.update({
+        "status": "OK",
+        "compile_seconds": compile_s,
+        "calibration_seconds": calib_s,
+        "memory_analysis": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+            "fits_hbm": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                        <= hw["hbm_gib"] * 2**30,
+            "hbm_budget_bytes": int(hw["hbm_gib"] * 2**30),
+        },
+        "cost_analysis": {"flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+                          "transcendentals": float(costs["transcendentals"])},
+        "collectives": coll_detail,
+        "n_chips": n_chips,
+        "roofline": {
+            **terms,
+            "bottleneck": bottleneck,
+            "model_flops_total": mf,
+            "attention_flops_total": attention_flops(cfg, cell),
+            "hlo_flops_total": flops_dev * n_chips,
+            "useful_flops_ratio": (mf / (flops_dev * n_chips)) if flops_dev else 0.0,
+            "step_time_s_max_term": max(terms.values()),
+            "step_time_s_sum": compute_s + memory_s + collective_s,
+        },
+        "attn_mode": plan.attn_mode,
+    })
+    return rec
+
+
+def run_and_save(arch: str, shape_name: str, multi_pod: bool,
+                 overrides: Optional[Dict[str, Any]] = None,
+                 tag: str = "") -> Dict[str, Any]:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod, overrides=overrides)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:], "overrides": overrides or {}}
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    suffix = f"_{tag}" if tag else ""
+    fname = f"{arch.replace('.', '_')}__{shape_name}__{mesh_tag}{suffix}.json"
+    with open(os.path.join(ARTIFACT_DIR, fname), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None, help="assigned arch id (dashed)")
+    ap.add_argument("--shape", type=str, default=None, choices=[c.name for c in SHAPE_CELLS])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep every (arch x shape)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", type=str, default="")
+    ap.add_argument("--override", type=str, default=None,
+                    help="JSON dict of ArchConfig overrides (perf experiments)")
+    args = ap.parse_args()
+    overrides = json.loads(args.override) if args.override else None
+
+    arch_list = list(ALIASES.keys()) if (args.all or args.arch is None) else [args.arch]
+    shape_list = [c.name for c in SHAPE_CELLS] if (args.all or args.shape is None) else [args.shape]
+    mesh_list = [False, True] if args.both_meshes else [args.multi_pod]
+
+    t0 = time.perf_counter()
+    for arch in arch_list:
+        for shape_name in shape_list:
+            for mp in mesh_list:
+                t1 = time.perf_counter()
+                rec = run_and_save(arch, shape_name, mp, overrides, args.tag)
+                status = rec.get("status")
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f" compile={rec['compile_seconds']:.0f}s"
+                             f" bottleneck={r['bottleneck']}"
+                             f" t={r['step_time_s_max_term']*1e3:.2f}ms"
+                             f" mem/dev={rec['memory_analysis']['peak_bytes_per_device']/2**30:.2f}GiB")
+                elif status == "FAIL":
+                    extra = " " + rec.get("error", "")[:160]
+                print(f"[{time.perf_counter()-t0:7.0f}s] {arch:20s} {shape_name:12s} "
+                      f"{'2x16x16' if mp else '16x16':8s} {status}{extra}", flush=True)
+    print(f"total: {time.perf_counter()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""HLO-text analysis: collective-bytes accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic, so
+we parse the (post-SPMD, per-device) HLO: build a name -> result-bytes map
+from every instruction definition, then for each collective op sum its
+*operand* bytes and convert to per-device wire bytes with op-specific ring
+multipliers:
+
+  all-reduce          2 x operand   (reduce-scatter + all-gather phases)
+  all-gather          1 x result    (each device receives result minus own shard)
+  reduce-scatter      1 x operand
+  all-to-all          1 x operand
+  collective-permute  1 x operand
+
+Start/done async pairs are counted once (on the -start op).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_WIRE_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "ragged-all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, object]:
+    """Parse per-device HLO text; return collective byte totals."""
+    result_bytes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    op_re = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+    # pass 1: result sizes — shape literals before the op-name token (tuple
+    # result types contain dtype[...] tokens but never a lowercase word
+    # followed by '(' so the first op_re match is the op itself).
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        opm = op_re.search(rhs)
+        head = rhs if opm is None else rhs[: opm.start()]
+        result_bytes[name] = _shapes_bytes(head)
+
+    per_op: Dict[str, Dict[str, float]] = {}
+    wire_total = 0.0
+    raw_total = 0
+    count = 0
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        opm = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # operand bytes: sum result sizes of referenced operands
+        args = rhs[opm.end():]
+        depth = 1
+        out = []
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            out.append(ch)
+        arg_str = "".join(out)
+        operand_names = re.findall(r"%([\w.\-]+)", arg_str)
+        op_bytes = sum(result_bytes.get(a, 0) for a in operand_names)
+        if op_bytes == 0:
+            op_bytes = result_bytes.get(name, 0)
+        if base == "all-gather":
+            wire = _WIRE_MULT[base] * result_bytes.get(name, op_bytes)
+        else:
+            wire = _WIRE_MULT[base] * op_bytes
+        d = per_op.setdefault(base, {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += op_bytes
+        d["wire_bytes"] += wire
+        wire_total += wire
+        raw_total += op_bytes
+        count += 1
+    return {
+        "per_op": per_op,
+        "wire_bytes_per_device": wire_total,
+        "operand_bytes_per_device": raw_total,
+        "n_collectives": count,
+    }

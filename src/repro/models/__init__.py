@@ -1,0 +1,11 @@
+from .config import ArchConfig, SHAPE_CELLS, ShapeCell, shape_cell  # noqa: F401
+from .model import (  # noqa: F401
+    cache_specs,
+    decode_step,
+    init_cache,
+    init_params,
+    input_specs,
+    layer_kinds,
+    loss_fn,
+    prefill,
+)

@@ -1,0 +1,811 @@
+"""Layer zoo: attention (GQA/RoPE/sliding/bias), SwiGLU, MoE, mLSTM, sLSTM,
+RG-LRU — pure-JAX init/apply pairs over plain-dict parameter pytrees.
+
+Conventions:
+  - params stored in ``cfg.param_dtype`` (fp32 by default), cast to
+    ``cfg.dtype`` (bf16) at application; softmax/score math in fp32;
+  - activations (B, S, D); attention heads grouped for GQA without
+    materializing repeated KV;
+  - every mixer exposes ``*_decode`` operating on one token + carried state;
+  - sharding via ``plan.constrain`` with logical dims resolved by the
+    :class:`repro.distributed.ShardingPlan` (no-ops without a mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingPlan
+from .config import ArchConfig
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e9
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(cfg: ArchConfig, d: int) -> Params:
+    return {"scale": jnp.ones((d,), _pdtype(cfg))}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin, x1f * sin + x2f * cos], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (full / sliding window), GQA, optional QKV bias
+# ---------------------------------------------------------------------------
+
+
+def attention_init(cfg: ArchConfig, key, *, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    scale = 0.02
+    p: Params = {
+        "wq": _init(ks[0], (d, nq * hd), scale, _pdtype(cfg)),
+        "wk": _init(ks[1], (d, nkv * hd), scale, _pdtype(cfg)),
+        "wv": _init(ks[2], (d, nkv * hd), scale, _pdtype(cfg)),
+        "wo": _init(ks[3], (nq * hd, d), scale / math.sqrt(2 * cfg.n_layers), _pdtype(cfg)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), _pdtype(cfg))
+        p["bk"] = jnp.zeros((nkv * hd,), _pdtype(cfg))
+        p["bv"] = jnp.zeros((nkv * hd,), _pdtype(cfg))
+    return p
+
+
+def _qkv(params: Params, cfg: ArchConfig, x: jnp.ndarray, xkv: Optional[jnp.ndarray] = None):
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    xkv = x if xkv is None else xkv
+    q = x @ params["wq"].astype(dt)
+    k = xkv @ params["wk"].astype(dt)
+    v = xkv @ params["wv"].astype(dt)
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    B = x.shape[0]
+    q = q.reshape(B, x.shape[1], nq, hd)
+    k = k.reshape(B, xkv.shape[1], nkv, hd)
+    v = v.reshape(B, xkv.shape[1], nkv, hd)
+    return q, k, v
+
+
+def _group_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """GQA scores without repeating KV. q: (B,S,Hq,D), k: (B,T,Hkv,D) ->
+    (B, Hkv, G, S, T) with G = Hq // Hkv."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k)
+
+
+def _group_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: (B,Hkv,G,S,T), v: (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    B, Hkv, G, S, T = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hkv * G, out.shape[-1])
+
+
+def _attn_mask(sq: int, skv: int, *, causal: bool, window: Optional[int],
+               q_offset: int = 0) -> jnp.ndarray:
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    diff = qpos[:, None] - kpos[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    return mask
+
+
+def attention_apply(
+    params: Params,
+    cfg: ArchConfig,
+    plan: ShardingPlan,
+    x: jnp.ndarray,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    memory: Optional[jnp.ndarray] = None,  # cross-attention source
+    use_rope: bool = True,
+    return_state: bool = False,
+    cache_len: Optional[int] = None,
+) -> Any:
+    """Full-sequence attention (training / prefill)."""
+    dt = _dtype(cfg)
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, memory)
+    T = k.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    if use_rope and memory is None:
+        cos, sin = rope_table(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # Shard heads (head-TP) or query-seq (SP) depending on the plan. Under
+    # head-TP the grouped-GQA einsum would reshape Hq -> (Hkv, G), neither of
+    # which divides the model axis, so we repeat KV to Hq heads instead (the
+    # standard TP treatment of GQA; repeated-KV FLOPs are negligible and the
+    # repeat is device-local because KV heads are replicated).
+    head_tp = plan.mesh is not None and plan.attn_mode == "head_tp" and plan.heads_sharded
+    if head_tp:
+        hspec = plan.heads(cfg.n_heads)
+        G = cfg.n_heads // cfg.n_kv_heads
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        q = plan.constrain(q, plan.batch(B), None, hspec, None)
+        k = plan.constrain(k, plan.batch(B), None, hspec, None)
+        v = plan.constrain(v, plan.batch(B), None, hspec, None)
+    elif plan.mesh is not None:
+        # context parallelism: queries stay seq-sharded; K/V are gathered over
+        # the sequence (small under GQA) so each device attends its q-shard
+        # against the full keys — no residual-stream gathers anywhere.
+        q = plan.constrain(q, plan.batch(B), plan.seq(S), None, None)
+        k = plan.constrain(k, plan.batch(B), None, None, None)
+        v = plan.constrain(v, plan.batch(B), None, None, None)
+
+    if cfg.attention_impl == "blocked" and memory is None and causal:
+        out = _blocked_attention(cfg, q, k, v, window=window)
+    elif head_tp:
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+        scores = scores / math.sqrt(cfg.resolved_head_dim)
+        if causal or window is not None:
+            mask = _attn_mask(S, T, causal=causal, window=window)
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    else:
+        scores = _group_scores(q, k).astype(jnp.float32)
+        scores = scores / math.sqrt(cfg.resolved_head_dim)
+        if causal or window is not None:
+            mask = _attn_mask(S, T, causal=causal, window=window)
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = _group_out(probs, v)
+    out = out.reshape(B, S, cfg.n_heads * cfg.resolved_head_dim)
+    y = out @ params["wo"].astype(dt)
+    if not return_state:
+        return y
+    # Build a decode-ready KV cache from the prefill K/V.
+    L = cache_len if cache_len is not None else T
+    if window is not None and L <= T:
+        # ring buffer: valid because prefill length is a multiple of L
+        k_c, v_c = k[:, -L:], v[:, -L:]
+    elif L <= T:
+        k_c, v_c = k[:, :L], v[:, :L]
+    else:
+        padw = ((0, 0), (0, L - T), (0, 0), (0, 0))
+        k_c, v_c = jnp.pad(k, padw), jnp.pad(v, padw)
+    return y, {"k": k_c, "v": v_c}
+
+
+def _blocked_attention(cfg: ArchConfig, q, k, v, *, window: Optional[int]) -> jnp.ndarray:
+    """Flash-style blockwise attention in pure jnp.
+
+    Never materializes the (S, T) score matrix — the §Perf memory-term lever
+    that is visible in the compiled HLO (unlike a Pallas kernel, which this
+    CPU dry-run could only run interpreted). Blocks are PYTHON loops, not
+    lax.scan, so XLA's cost_analysis counts every block (honest accounting)
+    and causally/window-masked-out block pairs are skipped entirely at trace
+    time (real FLOP savings, not just masking).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    bq = min(cfg.attention_block_q, S)
+    bkv = min(cfg.attention_block_kv, k.shape[1])
+    T = k.shape[1]
+    assert S % bq == 0 and T % bkv == 0, "blocked attention needs divisible tiles"
+    nq, nk = S // bq, T // bkv
+    scale = 1.0 / math.sqrt(D)
+    dt = _dtype(cfg)
+
+    out_blocks = []
+    for qi in range(nq):
+        qblk = q[:, qi * bq:(qi + 1) * bq].reshape(B, bq, Hkv, G, D)
+        m = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        q_lo, q_hi = qi * bq, (qi + 1) * bq - 1
+        for ki in range(nk):
+            k_lo, k_hi = ki * bkv, (ki + 1) * bkv - 1
+            if k_lo > q_hi:
+                continue  # strictly above the causal diagonal
+            if window is not None and k_hi < q_lo - window + 1:
+                continue  # entirely outside the sliding window
+            kblk = k[:, k_lo:k_hi + 1]
+            vblk = v[:, k_lo:k_hi + 1]
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk).astype(jnp.float32) * scale
+            diff = (q_lo + jnp.arange(bq))[:, None] - (k_lo + jnp.arange(bkv))[None, :]
+            mask = diff >= 0
+            if window is not None:
+                mask &= diff < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vblk.astype(jnp.float32))
+            m = m_new
+        out = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(dt)
+        out_blocks.append(out.transpose(0, 3, 1, 2, 4).reshape(B, bq, Hq, D))
+    return jnp.concatenate(out_blocks, axis=1)
+
+
+# -- decode path -------------------------------------------------------------
+
+
+def attention_cache_init(cfg: ArchConfig, plan: ShardingPlan, batch: int, max_len: int,
+                         *, window: Optional[int] = None) -> Params:
+    """KV cache; sliding-window layers keep only a ring buffer of ``window``."""
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    length = min(window, max_len) if window else max_len
+    shape = (batch, length, nkv, hd)
+    return {
+        "k": jnp.zeros(shape, _dtype(cfg)),
+        "v": jnp.zeros(shape, _dtype(cfg)),
+    }
+
+
+def attention_decode(
+    params: Params,
+    cfg: ArchConfig,
+    plan: ShardingPlan,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache: Params,
+    pos: jnp.ndarray,  # scalar int32 — absolute position of this token
+    *,
+    window: Optional[int] = None,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Params]:
+    dt = _dtype(cfg)
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = (x @ params["wq"].astype(dt)).reshape(B, 1, cfg.n_heads, hd)
+        if "bq" in params:
+            q = q + params["bq"].astype(dt).reshape(1, 1, cfg.n_heads, hd)
+        scores = _group_scores(q, k).astype(jnp.float32) / math.sqrt(hd)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = _group_out(probs, v).reshape(B, 1, cfg.n_heads * hd)
+        return out @ params["wo"].astype(dt), cache
+
+    q, k, v = _qkv(params, cfg, x)
+    if use_rope:
+        cos, sin = rope_table(pos[None], hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    L = cache["k"].shape[1]
+    slot = jnp.mod(pos, L) if window else jnp.minimum(pos, L - 1)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    kvspec = plan.heads(cfg.n_kv_heads) if plan.kv_heads_sharded else None
+    k_cache = plan.constrain(k_cache, plan.batch(B), plan.seq(L), kvspec, None)
+    v_cache = plan.constrain(v_cache, plan.batch(B), plan.seq(L), kvspec, None)
+    scores = _group_scores(q, k_cache).astype(jnp.float32) / math.sqrt(hd)
+    # valid slots: ring buffer for sliding, prefix for full attention
+    idx = jnp.arange(L)
+    if window:
+        age = pos - ((pos - idx) % L + idx * 0)  # absolute position stored at idx
+        # slot i holds absolute position p where p % L == i and p <= pos
+        abs_pos = pos - jnp.mod(pos - idx, L)
+        valid = (abs_pos >= 0) & (abs_pos >= pos - window + 1) & (abs_pos <= pos)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = _group_out(probs, v_cache).reshape(B, 1, cfg.n_heads * hd)
+    out = out @ params["wo"].astype(dt)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(cfg: ArchConfig, key, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": _init(k1, (d, 2 * f), 0.02, _pdtype(cfg)),
+        "w_out": _init(k2, (f, d), 0.02 / math.sqrt(2 * cfg.n_layers), _pdtype(cfg)),
+    }
+
+
+def swiglu_apply(params: Params, cfg: ArchConfig, plan: ShardingPlan, x: jnp.ndarray) -> jnp.ndarray:
+    dt = _dtype(cfg)
+    B, S = x.shape[0], x.shape[1]
+    h = x @ params["w_in"].astype(dt)
+    f = h.shape[-1] // 2
+    if plan.attn_mode == "head_tp":
+        # Megatron TP: hidden sharded on d_ff, activation gathers at entry
+        h = plan.constrain(h, plan.batch(B), None, plan.model_dim(2 * f))
+    elif S > 1:
+        # context parallel: hidden stays seq-sharded, weights gathered at use
+        h = plan.constrain(h, plan.batch(B), plan.seq(S), None)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    out = act @ params["w_out"].astype(dt)
+    if plan.attn_mode != "head_tp" and S > 1:
+        return plan.constrain(out, plan.batch(B), plan.seq(S), None)
+    return plan.constrain(out, plan.batch(B), None, None)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-based sort dispatch, EP on "model")
+# ---------------------------------------------------------------------------
+
+
+def moe_init(cfg: ArchConfig, key) -> Params:
+    d, f, E = cfg.d_model, cfg.resolved_moe_dff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": _init(ks[0], (d, E), 0.02, jnp.float32),
+        "w_in": _init(ks[1], (E, d, 2 * f), 0.02, _pdtype(cfg)),
+        "w_out": _init(ks[2], (E, f, d), 0.02 / math.sqrt(2 * cfg.n_layers), _pdtype(cfg)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(cfg, ks[3], d_ff=cfg.n_shared_experts * f)
+    if cfg.moe_dense_residual:
+        p["dense"] = swiglu_init(cfg, ks[4], d_ff=cfg.d_ff)
+    return p
+
+
+def moe_apply(params: Params, cfg: ArchConfig, plan: ShardingPlan, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-choice top-k with per-group capacity; returns (out, aux_loss).
+
+    Dispatch is sort-based (no (T, E, C) one-hots): within each group (= one
+    batch row; data-sharded so all sorting is device-local under GSPMD),
+    token->expert assignments are sorted by expert id, laid into an
+    (E, capacity, d) buffer — sharded over the "model" axis = EP with the
+    token all-to-all emerging from the sharding constraints — processed with
+    a single batched einsum per projection, and scattered back.
+    """
+    dt = _dtype(cfg)
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    f = cfg.resolved_moe_dff
+
+    # router matmul in bf16 (softmax stays fp32): keeps the x-cotangent of
+    # this branch bf16 — the fp32 path doubled the MoE collective bytes
+    gate_logits = (x @ params["router"].astype(dt)).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Token tensors stay d_model-sharded on the model axis through dispatch;
+    # the EP all-to-all emerges from re-constraining the (B, E, C, d) buffer
+    # to expert sharding. Keeps per-device dispatch memory at d/|model|.
+    dspec = plan.model_dim(d)
+
+    # Switch-style load-balancing auxiliary loss.
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (B * S * k)
+    aux = E * jnp.sum(me * ce)
+
+    cap = max(1, int(math.ceil(S * k / E * cfg.capacity_factor)))
+
+    flat_idx = gate_idx.reshape(B, S * k)  # group = batch row
+    order = jnp.argsort(flat_idx, axis=-1)  # (B, S*k)
+    sorted_exp = jnp.take_along_axis(flat_idx, order, axis=-1)
+    tok_of = order // k  # source token within group
+    counts = jax.vmap(lambda fe: jnp.zeros((E,), jnp.int32).at[fe].add(1))(flat_idx)
+    starts = jnp.cumsum(counts, axis=-1) - counts  # (B, E)
+    pos_in_exp = jnp.arange(S * k)[None, :] - jnp.take_along_axis(starts, sorted_exp, axis=-1)
+    keep = pos_in_exp < cap
+    slot = sorted_exp * cap + jnp.clip(pos_in_exp, 0, cap - 1)  # (B, S*k)
+
+    xg = plan.constrain(x, plan.batch(B), None, dspec)  # (B, S, d/model)
+    gathered = jnp.take_along_axis(xg, tok_of[..., None], axis=1)  # (B, S*k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    gathered = plan.constrain(gathered, plan.batch(B), None, dspec)
+    buf = jnp.zeros((B, E * cap, d), dt)
+    buf = jax.vmap(lambda bb, s, g: bb.at[s].add(g))(buf, slot, gathered)
+    # keep the scatter itself d-sharded (device-local), THEN reshard the
+    # plain buffer to expert sharding — GSPMD lowers a constraint on a plain
+    # tensor as all-to-all, but cannot push shardings through the scatter
+    # (it falls back to a full gather otherwise).
+    buf = plan.constrain(buf, plan.batch(B), None, dspec)
+    buf = buf.reshape(B, E, cap, d)
+    # d-sharded -> expert-sharded: the EP all-to-all
+    buf = plan.constrain(buf, plan.batch(B), plan.model_dim(E), None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, params["w_in"].astype(dt))
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate_h.astype(jnp.float32)).astype(dt) * up_h
+    out_buf = jnp.einsum("becf,efd->becd", act, params["w_out"].astype(dt))
+    out_buf = plan.constrain(out_buf, plan.batch(B), plan.model_dim(E), None, None)
+    # expert-sharded -> d-sharded on the plain tensor (a2a), then gather
+    out_buf = plan.constrain(out_buf, plan.batch(B), None, None, dspec)
+    out_buf = out_buf.reshape(B, E * cap, d)
+    out_buf = plan.constrain(out_buf, plan.batch(B), None, dspec)  # back to d-sharded
+
+    picked = jax.vmap(lambda ob, s: ob[s])(out_buf, slot)  # (B, S*k, d)
+    picked = plan.constrain(picked, plan.batch(B), None, dspec)
+    picked = jnp.where(keep[..., None], picked, 0)
+    # un-sort and combine with gate weights
+    inv = jnp.argsort(order, axis=-1)
+    picked = jnp.take_along_axis(picked, inv[..., None], axis=1)  # back to (B, S*k, d)
+    picked = plan.constrain(picked, plan.batch(B), None, dspec)
+    picked = picked.reshape(B, S, k, d)
+    picked = plan.constrain(picked, plan.batch(B), None, None, dspec)
+    out = jnp.einsum("bskd,bsk->bsd", picked, gate_vals.astype(dt))
+
+    if "shared" in params:
+        out = out + swiglu_apply(params["shared"], cfg, plan, x)
+    if "dense" in params:
+        out = out + swiglu_apply(params["dense"], cfg, plan, x)
+    return plan.constrain(out, plan.batch(B), None, None), aux
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block) — chunkwise-parallel linear attention form
+# ---------------------------------------------------------------------------
+# Simplification (documented in DESIGN.md): exponential gating is implemented
+# in its stabilized sigmoid form (forget gate f in (0,1), input gate i >= 0 via
+# exp of a bounded pre-activation), computed chunkwise; the naive recurrent
+# oracle lives in kernels/ref.py and the equivalence is property-tested.
+
+
+def mlstm_init(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    di = 2 * d  # up-projection factor 2 (xLSTM paper)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _init(ks[0], (d, 2 * di), 0.02, _pdtype(cfg)),  # u and gate z
+        "wq": _init(ks[1], (di, di), 0.02, _pdtype(cfg)),
+        "wk": _init(ks[2], (di, di), 0.02, _pdtype(cfg)),
+        "wv": _init(ks[3], (di, di), 0.02, _pdtype(cfg)),
+        "w_if": _init(ks[4], (d, 2 * H), 0.02, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "w_down": _init(ks[5], (di, d), 0.02 / math.sqrt(2 * cfg.n_layers), _pdtype(cfg)),
+        "norm": jnp.ones((di,), _pdtype(cfg)),
+    }
+
+
+def _mlstm_gates(params: Params, x: jnp.ndarray, H: int):
+    gif = x.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_pre, f_pre = jnp.split(gif, 2, axis=-1)  # (B, S, H)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    i_gate = jnp.exp(jnp.minimum(i_pre, 0.0))  # bounded input gate
+    return i_gate, log_f
+
+
+def mlstm_apply(params: Params, cfg: ArchConfig, plan: ShardingPlan, x: jnp.ndarray,
+                *, chunk: int = 256, return_state: bool = False) -> Any:
+    dt = _dtype(cfg)
+    B, S, d = x.shape
+    H = cfg.n_heads
+    u, z = jnp.split(x @ params["w_up"].astype(dt), 2, axis=-1)  # (B,S,di)
+    di = u.shape[-1]
+    hd = di // H
+    q = (u @ params["wq"].astype(dt)).reshape(B, S, H, hd)
+    kk = (u @ params["wk"].astype(dt)).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (u @ params["wv"].astype(dt)).reshape(B, S, H, hd)
+    i_gate, log_f = _mlstm_gates(params, x, H)  # (B,S,H)
+    q = plan.constrain(q, plan.batch(B), None, None, None)
+
+    C = max(1, min(chunk, S))
+    n_chunks = (S + C - 1) // C
+    pad = n_chunks * C - S
+    if pad:
+        q, kk, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (q, kk, v))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    qc = q.reshape(B, n_chunks, C, H, hd)
+    kc = kk.reshape(B, n_chunks, C, H, hd)
+    vc = v.reshape(B, n_chunks, C, H, hd)
+    ic = i_gate.reshape(B, n_chunks, C, H)
+    lfc = log_f.reshape(B, n_chunks, C, H)
+
+    def chunk_step(carry, inp):
+        Cst, nst = carry  # (B,H,hd,hd), (B,H,hd)
+        qb, kb, vb, ib, lfb = inp  # (B,C,H,*)
+        cum = jnp.cumsum(lfb, axis=1)  # (B,C,H) inclusive
+        total = cum[:, -1]  # (B,H)
+        # intra-chunk: causal decayed attention
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B, Cq, Ck, H) = F(q)-F(k)
+        tri = jnp.tril(jnp.ones((qb.shape[1], qb.shape[1]), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(decay), 0.0)  # includes diag f? use f up to q
+        s = jnp.einsum("bqhd,bkhd->bqkh", qb.astype(jnp.float32), kb.astype(jnp.float32))
+        intra = jnp.einsum("bqkh,bkh,bqkh,bkhd->bqhd", s, ib, w, vb.astype(jnp.float32))
+        n_intra = jnp.einsum("bqkh,bkh,bqkh->bqh", s, ib, w)  # q . n contribution
+        # inter-chunk: contribution of carried state
+        qdecay = jnp.exp(cum)  # decay from chunk start to q (inclusive)
+        inter = jnp.einsum("bqhd,bhde,bqh->bqhe", qb.astype(jnp.float32), Cst, qdecay)
+        n_inter = jnp.einsum("bqhd,bhd,bqh->bqh", qb.astype(jnp.float32), nst, qdecay)
+        # state update for next chunk
+        kdecay = jnp.exp(total[:, None, :] - cum)  # decay from k to chunk end
+        Cnew = Cst * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bkhd,bkh,bkh,bkhe->bhde", kb.astype(jnp.float32), ib, kdecay, vb.astype(jnp.float32))
+        nnew = nst * jnp.exp(total)[..., None] + jnp.einsum(
+            "bkhd,bkh,bkh->bhd", kb.astype(jnp.float32), ib, kdecay)
+        h = (intra + inter)
+        norm = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)[..., None]
+        return (Cnew, nnew), (h / norm).astype(dt)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    xs = (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+          ic.swapaxes(0, 1), lfc.swapaxes(0, 1))
+    (Cf, nf), hs = jax.lax.scan(chunk_step, (C0, n0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, n_chunks * C, di)[:, :S]
+    h = rmsnorm({"scale": params["norm"]}, h, cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    y = h @ params["w_down"].astype(dt)
+    if return_state:
+        return y, {"C": Cf, "n": nf}
+    return y
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int) -> Params:
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(params: Params, cfg: ArchConfig, plan: ShardingPlan,
+                 x: jnp.ndarray, state: Params) -> Tuple[jnp.ndarray, Params]:
+    dt = _dtype(cfg)
+    B = x.shape[0]
+    H = cfg.n_heads
+    u, z = jnp.split(x @ params["w_up"].astype(dt), 2, axis=-1)
+    di = u.shape[-1]
+    hd = di // H
+    q = (u @ params["wq"].astype(dt)).reshape(B, 1, H, hd).astype(jnp.float32)
+    kk = (u @ params["wk"].astype(dt)).reshape(B, 1, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (u @ params["wv"].astype(dt)).reshape(B, 1, H, hd).astype(jnp.float32)
+    i_gate, log_f = _mlstm_gates(params, x, H)  # (B,1,H)
+    f = jnp.exp(log_f[:, 0])  # (B,H)
+    i = i_gate[:, 0]
+    Cn = state["C"] * f[..., None, None] + jnp.einsum("bhd,bh,bhe->bhde", kk[:, 0], i, v[:, 0])
+    nn = state["n"] * f[..., None] + kk[:, 0] * i[..., None]
+    num = jnp.einsum("bhd,bhde->bhe", q[:, 0], Cn)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, 0], nn)), 1.0)
+    h = (num / den[..., None]).reshape(B, 1, di).astype(dt)
+    h = rmsnorm({"scale": params["norm"]}, h, cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return h @ params["w_down"].astype(dt), {"C": Cn, "n": nn}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block) — block-diagonal recurrent, scan over time
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": _init(ks[0], (d, 4 * d), 0.02, _pdtype(cfg)),  # i,f,z,o pre-acts
+        "r": _init(ks[1], (H, hd, 4 * hd), 0.02, jnp.float32),  # block-diag recurrence
+        "b": jnp.concatenate(
+            [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "w_down": _init(ks[2], (d, d), 0.02 / math.sqrt(2 * cfg.n_layers), _pdtype(cfg)),
+    }
+
+
+def _slstm_cell(params, cfg, xw, state):
+    """One step. xw: (B, 4d) input pre-activation; state: h,c,n,m (B, d)."""
+    H = cfg.n_heads
+    d = xw.shape[-1] // 4
+    hd = d // H
+    h, c, n, m = state
+    hr = h.reshape(-1, H, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hr, params["r"]).reshape(-1, 4 * d)
+
+    def gates(z):
+        zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+        return zi, zf, zz, zo
+
+    # interleave: w_x is (d,4d) laid out [i|f|z|o] blocks; r produces per-head
+    xi, xf, xz, xo = jnp.split(xw + params["b"], 4, axis=-1)
+    ri = rec[:, 0 * d : 1 * d]
+    rf = rec[:, 1 * d : 2 * d]
+    rz = rec[:, 2 * d : 3 * d]
+    ro = rec[:, 3 * d : 4 * d]
+    i_pre, f_pre = xi + ri, xf + rf
+    # stabilized exponential gating (xLSTM eq. 15-17)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    z_g = jnp.tanh(xz + rz)
+    o_g = jax.nn.sigmoid(xo + ro)
+    c_new = f_g * c + i_g * z_g
+    n_new = f_g * n + i_g
+    h_new = o_g * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(params: Params, cfg: ArchConfig, plan: ShardingPlan, x: jnp.ndarray,
+                *, return_state: bool = False) -> Any:
+    dt = _dtype(cfg)
+    B, S, d = x.shape
+    xw = (x @ params["w_x"].astype(dt)).astype(jnp.float32)  # (B,S,4d)
+
+    def step(state, xt):
+        new = _slstm_cell(params, cfg, xt, state)
+        return new, new[0]
+
+    z = jnp.zeros((B, d), jnp.float32)
+    init = (z, z, z, jnp.full((B, d), -1e9, jnp.float32))
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, init, xw.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(dt)
+    y = h @ params["w_down"].astype(dt)
+    if return_state:
+        return y, {"h": h_f, "c": c_f, "n": n_f, "m": m_f}
+    return y
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int) -> Params:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), -1e9, jnp.float32)}
+
+
+def slstm_decode(params: Params, cfg: ArchConfig, plan: ShardingPlan,
+                 x: jnp.ndarray, state: Params) -> Tuple[jnp.ndarray, Params]:
+    dt = _dtype(cfg)
+    B = x.shape[0]
+    xw = (x[:, 0] @ params["w_x"].astype(dt)).astype(jnp.float32)
+    h, c, n, m = _slstm_cell(params, cfg, xw, (state["h"], state["c"], state["n"], state["m"]))
+    out = (h.astype(dt) @ params["w_down"].astype(dt))[:, None]
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+
+def rglru_init(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    dr = d  # lru width = d_model (RecurrentGemma-2B)
+    ks = jax.random.split(key, 5)
+    # a = sigmoid(lam) in (0,1), init so that a^c is close to 1 (long memory)
+    lam = jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, dr))) * 0 + 2.0
+    return {
+        "w_gate": _init(ks[0], (d, dr), 0.02, _pdtype(cfg)),
+        "w_rec_in": _init(ks[1], (d, dr), 0.02, _pdtype(cfg)),
+        "w_a": _init(ks[2], (dr, dr), 0.01, jnp.float32),
+        "w_i": _init(ks[3], (dr, dr), 0.01, jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_down": _init(ks[4], (dr, d), 0.02 / math.sqrt(2 * cfg.n_layers), _pdtype(cfg)),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_coeffs(params: Params, u: jnp.ndarray):
+    """u: (B,S,dr) fp32 -> per-step decay a_t and input b_t."""
+    r = jax.nn.sigmoid(u @ params["w_a"])  # recurrence gate
+    i = jax.nn.sigmoid(u @ params["w_i"])  # input gate
+    log_a0 = jax.nn.log_sigmoid(params["lam"])  # log a in (-inf, 0)
+    log_a = _RGLRU_C * r * log_a0  # a_t = a^(c * r_t)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t via associative scan."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return a_s * h0[:, None, :] + b_s
+
+
+def rglru_apply(params: Params, cfg: ArchConfig, plan: ShardingPlan, x: jnp.ndarray,
+                *, use_pallas: bool = False, return_state: bool = False) -> Any:
+    dt = _dtype(cfg)
+    B, S, d = x.shape
+    gate = jax.nn.gelu((x @ params["w_gate"].astype(dt)).astype(jnp.float32))
+    u = (x @ params["w_rec_in"].astype(dt)).astype(jnp.float32)
+    a, b = _rglru_coeffs(params, u)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        h = kops.rglru_scan(a, b, jnp.zeros((B, a.shape[-1]), jnp.float32))
+    else:
+        h = rglru_scan_ref(a, b, jnp.zeros((B, a.shape[-1]), jnp.float32))
+    y = (h * gate).astype(dt)
+    y = y @ params["w_down"].astype(dt)
+    if return_state:
+        return y, {"h": h[:, -1]}
+    return y
+
+
+def rglru_state_init(cfg: ArchConfig, batch: int) -> Params:
+    return {"h": jnp.zeros((batch, cfg.d_model), jnp.float32)}
+
+
+def rglru_decode(params: Params, cfg: ArchConfig, plan: ShardingPlan,
+                 x: jnp.ndarray, state: Params) -> Tuple[jnp.ndarray, Params]:
+    dt = _dtype(cfg)
+    xt = x[:, 0]
+    gate = jax.nn.gelu((xt @ params["w_gate"].astype(dt)).astype(jnp.float32))
+    u = (xt @ params["w_rec_in"].astype(dt)).astype(jnp.float32)
+    a, b = _rglru_coeffs(params, u[:, None, :])
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h * gate).astype(dt)[:, None]
+    return y @ params["w_down"].astype(dt), {"h": h}

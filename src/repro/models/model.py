@@ -1,0 +1,639 @@
+"""Unified model assembly: pattern-scanned blocks, train/prefill/decode paths.
+
+A model is:  embed -> [prefix layers] -> scan(pattern units) -> [tail layers]
+             -> final RMSNorm -> (tied) unembedding.
+
+Whisper-style encoder-decoder wraps a non-causal encoder around the decoder
+stack and adds cross-attention to every decoder layer. Modality frontends are
+stubs per the assignment: ``input_kind == "embeddings"`` consumes precomputed
+frame/patch embeddings for train/prefill (decode always consumes tokens).
+
+Three lowered entry points (see repro.launch.dryrun):
+  - ``loss_fn``     : full-sequence training loss (+ MoE aux loss);
+  - ``prefill``     : full-sequence forward that also returns a decode cache;
+  - ``decode_step`` : one token against the carried cache/state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingPlan, make_plan
+from . import layers as L
+from .config import ArchConfig
+
+Params = Dict[str, Any]
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: ArchConfig) -> Dict[str, List[str]]:
+    """prefix / pattern / tail mixer kinds."""
+    prefix = [cfg.pattern[0] if cfg.pattern else "full"] * cfg.first_k_dense
+    return {"prefix": prefix, "pattern": list(cfg.pattern), "tail": list(cfg.tail_kinds)}
+
+
+def _ffn_kind(cfg: ArchConfig, *, dense_override: bool = False) -> str:
+    if cfg.d_ff == 0 and cfg.ffn_kind != "moe":
+        return "none"
+    if cfg.ffn_kind == "moe" and not dense_override:
+        return "moe"
+    return "swiglu" if cfg.d_ff > 0 else "none"
+
+
+def _layer_init(cfg: ArchConfig, kind: str, key, *, ffn: str, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.rmsnorm_init(cfg, cfg.d_model)}
+    if kind in ("full", "sliding"):
+        p["mixer"] = L.attention_init(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mixer"] = L.mlstm_init(cfg, ks[0])
+    elif kind == "slstm":
+        p["mixer"] = L.slstm_init(cfg, ks[0])
+    elif kind == "rglru":
+        p["mixer"] = L.rglru_init(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_cross"] = L.rmsnorm_init(cfg, cfg.d_model)
+        p["cross"] = L.attention_init(cfg, ks[3], cross=True)
+    if ffn != "none":
+        p["norm2"] = L.rmsnorm_init(cfg, cfg.d_model)
+        p["ffn"] = L.moe_init(cfg, ks[1]) if ffn == "moe" else L.swiglu_init(cfg, ks[1])
+    return p
+
+
+def _layer_apply(
+    cfg: ArchConfig,
+    plan: ShardingPlan,
+    kind: str,
+    ffn: str,
+    params: Params,
+    x: jnp.ndarray,
+    *,
+    memory: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    return_state: bool = False,
+    cache_len: Optional[int] = None,
+) -> Any:
+    window = cfg.window if kind == "sliding" else None
+    use_rope = cfg.rope_theta > 0
+    # Megatron-style sequence sharding of the residual stream: between layers
+    # x lives (batch, seq/model, d); GSPMD inserts the all-gather at the QKV /
+    # FFN projections and reduce-scatters the outputs. Cuts saved-activation
+    # memory by the model-axis size (16x) — required for HBM fit at depth.
+    B, S = x.shape[0], x.shape[1]
+    if S > 1:
+        x = plan.constrain(x, plan.batch(B), plan.seq(S), None)
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    state = None
+    if kind in ("full", "sliding"):
+        out = L.attention_apply(
+            params["mixer"], cfg, plan, h, causal=causal, window=window,
+            use_rope=use_rope, return_state=return_state, cache_len=cache_len)
+        if return_state:
+            out, state = out
+    elif kind == "mlstm":
+        out = L.mlstm_apply(params["mixer"], cfg, plan, h, return_state=return_state)
+        if return_state:
+            out, state = out
+    elif kind == "slstm":
+        out = L.slstm_apply(params["mixer"], cfg, plan, h, return_state=return_state)
+        if return_state:
+            out, state = out
+    elif kind == "rglru":
+        out = L.rglru_apply(params["mixer"], cfg, plan, h,
+                            use_pallas=(cfg.attention_impl == "pallas"),
+                            return_state=return_state)
+        if return_state:
+            out, state = out
+    else:
+        raise ValueError(kind)
+    out = jax.ad_checkpoint.checkpoint_name(out, "attn_out")
+    x = x + out
+    cross_state = None
+    if "cross" in params and memory is not None:
+        hc = L.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        out = L.attention_apply(params["cross"], cfg, plan, hc, memory=memory,
+                                causal=False, use_rope=False)
+        x = x + out
+        if return_state:
+            dt = jnp.dtype(cfg.dtype)
+            ck = (memory @ params["cross"]["wk"].astype(dt)).reshape(
+                memory.shape[0], memory.shape[1], cfg.n_kv_heads, cfg.resolved_head_dim)
+            cv = (memory @ params["cross"]["wv"].astype(dt)).reshape(
+                memory.shape[0], memory.shape[1], cfg.n_kv_heads, cfg.resolved_head_dim)
+            cross_state = {"ck": ck, "cv": cv}
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h2 = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            out2, aux = L.moe_apply(params["ffn"], cfg, plan, h2)
+            out2 = jax.ad_checkpoint.checkpoint_name(out2, "moe_out")
+        else:
+            out2 = L.swiglu_apply(params["ffn"], cfg, plan, h2)
+            out2 = jax.ad_checkpoint.checkpoint_name(out2, "ffn_out")
+        x = x + out2
+    # keep the carried residual stream sequence-sharded — this is the tensor
+    # lax.scan saves per unit for the backward pass
+    if S > 1:
+        x = plan.constrain(x, plan.batch(B), plan.seq(S), None)
+    if return_state:
+        st = {"mixer": state}
+        if cross_state is not None:
+            st["cross"] = cross_state
+        return x, aux, st
+    return x, aux
+
+
+def _layer_cache_init(cfg: ArchConfig, plan: ShardingPlan, kind: str, batch: int,
+                      cache_len: int) -> Params:
+    if kind in ("full", "sliding"):
+        window = cfg.window if kind == "sliding" else None
+        return L.attention_cache_init(cfg, plan, batch, cache_len, window=window)
+    if kind == "mlstm":
+        return L.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return L.slstm_state_init(cfg, batch)
+    if kind == "rglru":
+        return L.rglru_state_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def _layer_decode(
+    cfg: ArchConfig,
+    plan: ShardingPlan,
+    kind: str,
+    ffn: str,
+    params: Params,
+    x: jnp.ndarray,
+    cache: Params,
+    pos: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Params]:
+    window = cfg.window if kind == "sliding" else None
+    use_rope = cfg.rope_theta > 0
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if kind in ("full", "sliding"):
+        out, new_mix = L.attention_decode(params["mixer"], cfg, plan, h, cache["mixer"],
+                                          pos, window=window, use_rope=use_rope)
+    elif kind == "mlstm":
+        out, new_mix = L.mlstm_decode(params["mixer"], cfg, plan, h, cache["mixer"])
+    elif kind == "slstm":
+        out, new_mix = L.slstm_decode(params["mixer"], cfg, plan, h, cache["mixer"])
+    elif kind == "rglru":
+        out, new_mix = L.rglru_decode(params["mixer"], cfg, plan, h, cache["mixer"])
+    else:
+        raise ValueError(kind)
+    new_cache["mixer"] = new_mix
+    x = x + out
+    if "cross" in params and "cross" in cache:
+        hc = L.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        out, _ = L.attention_decode(params["cross"], cfg, plan, hc, {}, pos,
+                                    cross_kv=(cache["cross"]["ck"], cache["cross"]["cv"]),
+                                    use_rope=False)
+        x = x + out
+    if ffn != "none":
+        h2 = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            out2, _ = L.moe_apply(params["ffn"], cfg, plan, h2)
+        else:
+            out2 = L.swiglu_apply(params["ffn"], cfg, plan, h2)
+        x = x + out2
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    kinds = layer_kinds(cfg)
+    keys = jax.random.split(key, 8)
+    pdt = jnp.dtype(cfg.param_dtype)
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(pdt),
+        "final_norm": L.rmsnorm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[1], (cfg.d_model, cfg.padded_vocab),
+                                            jnp.float32) * 0.02).astype(pdt)
+    cross = cfg.encoder_layers > 0
+
+    # prefix (dense-FFN leading layers, e.g. Kimi's first layer)
+    if kinds["prefix"]:
+        pk = jax.random.split(keys[2], len(kinds["prefix"]))
+        params["prefix"] = [
+            _layer_init(cfg, k, pk[i], ffn=_ffn_kind(cfg, dense_override=True), cross=cross)
+            for i, k in enumerate(kinds["prefix"])
+        ]
+    # scanned units
+    if cfg.n_units > 0:
+        uk = jax.random.split(keys[3], cfg.n_units)
+
+        def one_unit(k):
+            lk = jax.random.split(k, len(kinds["pattern"]))
+            return {
+                f"p{i}": _layer_init(cfg, kind, lk[i], ffn=_ffn_kind(cfg), cross=cross)
+                for i, kind in enumerate(kinds["pattern"])
+            }
+
+        units = [one_unit(uk[i]) for i in range(cfg.n_units)]
+        params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    # tail
+    if kinds["tail"]:
+        tk = jax.random.split(keys[4], len(kinds["tail"]))
+        params["tail"] = [
+            _layer_init(cfg, k, tk[i], ffn=_ffn_kind(cfg), cross=cross)
+            for i, k in enumerate(kinds["tail"])
+        ]
+    # encoder (whisper)
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[5], cfg.encoder_layers)
+        params["encoder"] = [
+            _layer_init(cfg, "full", ek[i], ffn="swiglu") for i in range(cfg.encoder_layers)
+        ]
+        params["encoder_norm"] = L.rmsnorm_init(cfg, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward paths
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(S: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(cfg: ArchConfig, plan: ShardingPlan, params: Params, batch: Dict) -> jnp.ndarray:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.input_kind == "embeddings" and "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+    else:
+        tok = batch["tokens"]
+        x = jnp.take(params["embed"].astype(dt), tok, axis=0)
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.rope_theta <= 0:  # sinusoidal absolute positions (whisper)
+        x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(dt)
+    return plan.constrain(x, plan.batch(x.shape[0]), None, None)
+
+
+def _encode(cfg: ArchConfig, plan: ShardingPlan, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt)
+    x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(dt)
+    for p in params["encoder"]:
+        x, _ = _layer_apply(cfg, plan, "full", "swiglu", p, x, causal=False)
+    return L.rmsnorm(params["encoder_norm"], x, cfg.norm_eps)
+
+
+def _remat_wrap(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "names":
+        # save mixer/FFN block outputs: the backward pass re-runs neither the
+        # expert einsums (no 2nd expert-weight gather) nor attention
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "ffn_out", "moe_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def backbone(
+    cfg: ArchConfig,
+    plan: ShardingPlan,
+    params: Params,
+    x: jnp.ndarray,
+    *,
+    memory: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefix + scanned units + tail. Returns (hidden, total_aux_loss)."""
+    kinds = layer_kinds(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(kinds["prefix"]):
+        x, aux = _layer_apply(cfg, plan, kind, _ffn_kind(cfg, dense_override=True),
+                              params["prefix"][i], x, memory=memory, causal=causal)
+        aux_total += aux
+
+    if cfg.n_units > 0:
+        pattern = kinds["pattern"]
+        ffn = _ffn_kind(cfg)
+
+        def unit_body(carry, unit_params):
+            h, aux_in = carry
+            for i, kind in enumerate(pattern):
+                h, aux = _layer_apply(cfg, plan, kind, ffn, unit_params[f"p{i}"], h,
+                                      memory=memory, causal=causal)
+                aux_in = aux_in + aux
+            return (h, aux_in), None
+
+        body = _remat_wrap(cfg, unit_body)
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["units"])
+        else:
+            for u in range(cfg.n_units):
+                unit_params = jax.tree.map(lambda a: a[u], params["units"])
+                (x, aux_total), _ = body((x, aux_total), unit_params)
+
+    for i, kind in enumerate(kinds["tail"]):
+        x, aux = _layer_apply(cfg, plan, kind, _ffn_kind(cfg), params["tail"][i], x,
+                              memory=memory, causal=causal)
+        aux_total += aux
+    return x, aux_total
+
+
+def logits_of(cfg: ArchConfig, plan: ShardingPlan, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+    dt = jnp.dtype(cfg.dtype)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    W = params["head"] if "head" in params else params["embed"].T
+    logits = h @ W.astype(dt)
+    return plan.constrain(logits, plan.batch(h.shape[0]), None,
+                          plan.model_dim(cfg.padded_vocab))
+
+
+def cross_entropy(cfg: ArchConfig, logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        lf = jnp.where(pad_mask, -1e9, lf)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _chunked_xent(cfg: ArchConfig, plan: ShardingPlan, params: Params,
+                  h: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Cross-entropy without materializing (B, S, V) logits (§Perf lever)."""
+    dt = jnp.dtype(cfg.dtype)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    W = (params["head"] if "head" in params else params["embed"].T).astype(dt)
+    B, S, d = h.shape
+    C = cfg.logits_chunk
+    n_chunk = (S + C - 1) // C
+    pad = n_chunk * C - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    hc = h.reshape(B, n_chunk, C, d).swapaxes(0, 1)
+    tc = targets.reshape(B, n_chunk, C).swapaxes(0, 1)
+    valid = (jnp.arange(n_chunk * C) < S).reshape(n_chunk, C)
+
+    def body(acc, inp):
+        hb, tb, vb = inp  # (B,C,d), (B,C), (C,)
+        logits = (hb @ W).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab:
+            logits = jnp.where(jnp.arange(cfg.padded_vocab) >= cfg.vocab, -1e9, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((logz - gold) * vb[None, :]), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc, valid))
+    return total / (B * S)
+
+
+def loss_fn(cfg: ArchConfig, plan: ShardingPlan, params: Params, batch: Dict) -> jnp.ndarray:
+    memory = None
+    if cfg.encoder_layers:
+        memory = _encode(cfg, plan, params, batch["frames"])
+    x = _embed_inputs(cfg, plan, params, batch)
+    h, aux = backbone(cfg, plan, params, x, memory=memory, causal=True)
+    if cfg.logits_chunk > 0:
+        loss = _chunked_xent(cfg, plan, params, h, batch["targets"])
+    else:
+        logits = logits_of(cfg, plan, params, h)
+        loss = cross_entropy(cfg, logits, batch["targets"])
+    return loss + MOE_AUX_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, plan: ShardingPlan, batch: int, cache_len: int) -> Params:
+    kinds = layer_kinds(cfg)
+    cache: Params = {}
+    cross = cfg.encoder_layers > 0
+
+    def one(kind: str) -> Params:
+        c: Params = {"mixer": _layer_cache_init(cfg, plan, kind, batch, cache_len)}
+        if cross:
+            c["cross"] = {
+                "ck": jnp.zeros((batch, cfg.encoder_seq or cache_len, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim), jnp.dtype(cfg.dtype)),
+                "cv": jnp.zeros((batch, cfg.encoder_seq or cache_len, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim), jnp.dtype(cfg.dtype)),
+            }
+        return c
+
+    if kinds["prefix"]:
+        cache["prefix"] = [one(k) for k in kinds["prefix"]]
+    if cfg.n_units > 0:
+        unit = {f"p{i}": one(k) for i, k in enumerate(kinds["pattern"])}
+        cache["units"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_units,) + a.shape).copy(), unit)
+    if kinds["tail"]:
+        cache["tail"] = [one(k) for k in kinds["tail"]]
+    cache["pos"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def prefill(cfg: ArchConfig, plan: ShardingPlan, params: Params, batch: Dict,
+            cache_len: int) -> Tuple[Params, jnp.ndarray]:
+    """Run the full prompt, returning (decode cache, last-position logits)."""
+    kinds = layer_kinds(cfg)
+    memory = None
+    if cfg.encoder_layers:
+        memory = _encode(cfg, plan, params, batch["frames"])
+    x = _embed_inputs(cfg, plan, params, batch)
+    cache: Params = {}
+
+    def apply_collect(kind, ffn, p, h):
+        h2, _aux, st = _layer_apply(cfg, plan, kind, ffn, p, h, memory=memory,
+                                    causal=True, return_state=True, cache_len=cache_len)
+        return h2, st
+
+    if kinds["prefix"]:
+        cache["prefix"] = []
+        for i, kind in enumerate(kinds["prefix"]):
+            x, st = apply_collect(kind, _ffn_kind(cfg, dense_override=True),
+                                  params["prefix"][i], x)
+            cache["prefix"].append(_state_to_cache(st))
+    if cfg.n_units > 0:
+        pattern = kinds["pattern"]
+        ffn = _ffn_kind(cfg)
+
+        def unit_body(h, unit_params):
+            sts = {}
+            for i, kind in enumerate(pattern):
+                h, st = apply_collect(kind, ffn, unit_params[f"p{i}"], h)
+                sts[f"p{i}"] = _state_to_cache(st)
+            return h, sts
+
+        if cfg.scan_layers:
+            x, unit_caches = jax.lax.scan(unit_body, x, params["units"])
+        else:
+            caches = []
+            for u in range(cfg.n_units):
+                unit_params = jax.tree.map(lambda a: a[u], params["units"])
+                x, c = unit_body(x, unit_params)
+                caches.append(c)
+            unit_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        cache["units"] = unit_caches
+    if kinds["tail"]:
+        cache["tail"] = []
+        for i, kind in enumerate(kinds["tail"]):
+            x, st = apply_collect(kind, _ffn_kind(cfg), params["tail"][i], x)
+            cache["tail"].append(_state_to_cache(st))
+    h_last = x[:, -1:]
+    logits = logits_of(cfg, plan, params, h_last)
+    S = (batch["tokens"].shape[1] if "tokens" in batch else batch["embeds"].shape[1])
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return cache, logits
+
+
+def _state_to_cache(st: Params) -> Params:
+    out = {"mixer": st["mixer"]}
+    if "cross" in st:
+        out["cross"] = st["cross"]
+    return out
+
+
+def decode_step(cfg: ArchConfig, plan: ShardingPlan, params: Params, cache: Params,
+                tokens: jnp.ndarray) -> Tuple[Params, jnp.ndarray]:
+    """One greedy decode step: tokens (B, 1) -> (new cache, logits (B,1,V))."""
+    kinds = layer_kinds(cfg)
+    pos = cache["pos"]
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0) * math.sqrt(cfg.d_model)
+    if cfg.rope_theta <= 0:
+        # absolute sinusoidal position of this token
+        d = cfg.d_model
+        dim = jnp.arange(d // 2, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(dt)
+    x = plan.constrain(x, plan.batch(x.shape[0]), None, None)
+    new_cache: Params = {"pos": pos + 1}
+
+    if kinds["prefix"]:
+        new_cache["prefix"] = []
+        for i, kind in enumerate(kinds["prefix"]):
+            x, c = _layer_decode(cfg, plan, kind, _ffn_kind(cfg, dense_override=True),
+                                 params["prefix"][i], x, cache["prefix"][i], pos)
+            new_cache["prefix"].append(c)
+    if cfg.n_units > 0:
+        pattern = kinds["pattern"]
+        ffn = _ffn_kind(cfg)
+
+        def unit_body(h, xs):
+            unit_params, unit_cache = xs
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                h, c = _layer_decode(cfg, plan, kind, ffn, unit_params[f"p{i}"], h,
+                                     unit_cache[f"p{i}"], pos)
+                new_c[f"p{i}"] = c
+            return h, new_c
+
+        if cfg.scan_layers:
+            x, unit_caches = jax.lax.scan(unit_body, x, (params["units"], cache["units"]))
+        else:
+            caches = []
+            for u in range(cfg.n_units):
+                xs_u = jax.tree.map(lambda a: a[u], (params["units"], cache["units"]))
+                x, c = unit_body(x, xs_u)
+                caches.append(c)
+            unit_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        new_cache["units"] = unit_caches
+    if kinds["tail"]:
+        new_cache["tail"] = []
+        for i, kind in enumerate(kinds["tail"]):
+            x, c = _layer_decode(cfg, plan, kind, _ffn_kind(cfg), params["tail"][i], x,
+                                 cache["tail"][i], pos)
+            new_cache["tail"].append(c)
+    logits = logits_of(cfg, plan, params, x)
+    return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins for the dry-run; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, seq_len: int, global_batch: int, kind: str,
+                plan: Optional[ShardingPlan] = None) -> Dict[str, Any]:
+    """Abstract inputs for ``kind`` in {train, prefill}; decode uses
+    ``cache_specs`` + a (B, 1) token. Shardings attached when a plan is given."""
+
+    def sds(shape, dtype, *dims):
+        sh = jax.ShapeDtypeStruct(shape, dtype)
+        if plan is not None and plan.mesh is not None:
+            sh = jax.ShapeDtypeStruct(shape, dtype, sharding=plan.sharding(*dims))
+        return sh
+
+    B, S = global_batch, seq_len
+    batch: Dict[str, Any] = {}
+    bspec = plan.batch(B) if plan is not None else None
+    if cfg.encoder_layers:
+        batch["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16, bspec, None, None)
+        batch["tokens"] = sds((B, S), jnp.int32, bspec, None)
+    elif cfg.input_kind == "embeddings":
+        batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16, bspec, None, None)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32, bspec, None)
+    if kind == "train":
+        batch["targets"] = sds((B, S), jnp.int32, bspec, None)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, plan: Optional[ShardingPlan], batch: int,
+                cache_len: int) -> Any:
+    """ShapeDtypeStruct pytree matching ``init_cache`` with shardings."""
+    cache = jax.eval_shape(lambda: init_cache(cfg, make_plan(None, n_heads=cfg.n_heads,
+                                                             n_kv_heads=cfg.n_kv_heads),
+                                              batch, cache_len))
+    if plan is None or plan.mesh is None:
+        return cache
+
+    def attach(leaf: jax.ShapeDtypeStruct) -> jax.ShapeDtypeStruct:
+        spec = cache_leaf_spec(cfg, plan, leaf.shape)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=plan.sharding(*spec))
+
+    return jax.tree.map(attach, cache)
+
+
+def cache_leaf_spec(cfg: ArchConfig, plan: ShardingPlan, shape: Tuple[int, ...]):
+    """Sharding for a cache leaf, keyed by rank/shape structure."""
+    nd = len(shape)
+    if nd == 0:
+        return ()
+    # leading scan-units dim?
+    off = 1 if (cfg.n_units > 0 and shape[0] == cfg.n_units and nd >= 2) else 0
+    dims: List[Any] = [None] * nd
+    body = shape[off:]
+    if len(body) == 4:  # (B, L, H, D) KV cache
+        dims[off + 0] = plan.batch(body[0])
+        dims[off + 1] = plan.seq(body[1])
+    elif len(body) >= 1:
+        dims[off + 0] = plan.batch(body[0])
+    return tuple(dims)

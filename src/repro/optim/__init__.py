@@ -1,0 +1,10 @@
+from .optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+    sgdm,
+)
+from .compress import ef_int8_compress, ef_int8_decompress  # noqa: F401

@@ -1,0 +1,174 @@
+"""Optimizers (pure-pytree, optax-style init/update pairs).
+
+- ``adamw``     : fp32 m/v states (default for dense archs);
+- ``adafactor`` : factored second moments for >=2-D params — the memory-light
+  choice for the trillion-param MoEs (see DESIGN.md memory budget);
+- ``sgdm``      : momentum SGD.
+
+Optimizer states inherit the parameter sharding (ZeRO: FSDP specs applied to
+params apply verbatim to states).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params, jnp.ndarray], Tuple[Params, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw(lr: Schedule, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0,
+          state_dtype: str = "float32") -> Optimizer:
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=sdt)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr(step)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+            mf = b1 * mf + (1 - b1) * g
+            vf = b2 * vf + (1 - b2) * g * g
+            u = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+                    mf.astype(sdt), vf.astype(sdt))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(lr: Schedule, *, eps: float = 1e-30, clip_norm: float = 1.0,
+              min_dim_factored: int = 128, decay: float = 0.8) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern). Params with >= 2
+    dims of size >= min_dim_factored store row/col statistics only —
+    O(n+m) state instead of O(nm)."""
+
+    def factored(p) -> bool:
+        dims = [d for d in p.shape if d >= min_dim_factored]
+        return p.ndim >= 2 and len(dims) >= 2
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return jax.tree.map(one, params, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], eps)
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS <= 1) per Adafactor
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), ns
+
+        out = jax.tree.map(
+            upd, grads, state, params,
+            is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_s
+
+    return Optimizer("adafactor", init, update)
+
+
+def sgdm(lr: Schedule, *, momentum: float = 0.9, clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr_t = lr(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m}
+
+    return Optimizer("sgdm", init, update)
+
+
+def make_optimizer(name: str, *, peak_lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000, **kw) -> Optimizer:
+    sched = cosine_schedule(peak_lr, warmup, total)
+    if name == "adamw":
+        return adamw(sched, **kw)
+    if name == "adafactor":
+        return adafactor(sched, **kw)
+    if name == "sgdm":
+        return sgdm(sched, **kw)
+    raise ValueError(name)

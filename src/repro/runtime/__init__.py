@@ -1,0 +1,9 @@
+from .trainstep import (  # noqa: F401
+    TrainState,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    param_specs,
+    state_specs,
+)
+from .trainer import Trainer, TrainerConfig  # noqa: F401

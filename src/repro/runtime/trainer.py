@@ -1,0 +1,159 @@
+"""Trainer: end-to-end training driver with checkpointing and elastic re-mesh.
+
+Responsibilities:
+  - build (or accept) a device mesh and the per-arch ShardingPlan;
+  - init / restore sharded TrainState;
+  - run jit'd train steps over the data pipeline with metrics;
+  - periodic async checkpoints (CheckpointManager);
+  - **elastic resize**: ``resize(new_mesh)`` re-lowers the step and reloads
+    the latest checkpoint under the new mesh — the recovery path for node
+    failures and for OEF allocation changes between scheduling rounds;
+  - simulated failure injection for integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint import CheckpointManager
+from repro.data import batch_iterator
+from repro.distributed.sharding import ShardingPlan, make_plan
+from repro.models import init_params
+from repro.models.config import ArchConfig
+from repro.optim import make_optimizer
+from .trainstep import TrainState, make_train_step, param_specs, state_specs
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    total_steps: int = 200
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 2
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.plan = make_plan(mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                     prefer=cfg.attn_parallelism, global_batch=tcfg.global_batch)
+        self.optimizer = make_optimizer(
+            tcfg.optimizer, peak_lr=tcfg.peak_lr, warmup=tcfg.warmup, total=tcfg.total_steps)
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, every=tcfg.ckpt_every,
+                                       keep=tcfg.ckpt_keep) if tcfg.ckpt_dir else None)
+        self._build()
+
+    # -- setup ---------------------------------------------------------------
+    def _build(self) -> None:
+        cfg, tcfg = self.cfg, self.tcfg
+        key = jax.random.PRNGKey(tcfg.seed)
+
+        def init_state() -> TrainState:
+            params = init_params(cfg, key)
+            opt = self.optimizer.init(params)
+            return TrainState(params, opt, jnp.zeros((), jnp.int32))
+
+        if self.mesh is not None:
+            shape = jax.eval_shape(init_state)
+            specs = state_specs(cfg, self.plan, shape)
+            shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                                     is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            with self.mesh:
+                self.state = jax.jit(init_state, out_shardings=shardings)()
+            self._state_shardings = shardings
+        else:
+            self.state = init_state()
+            self._state_shardings = None
+
+        step_fn = make_train_step(cfg, self.plan, self.optimizer)
+        if self.mesh is not None:
+            self._step = jax.jit(step_fn, donate_argnums=0,
+                                 in_shardings=(self._state_shardings, None),
+                                 out_shardings=(self._state_shardings, None))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=0)
+        self._data = batch_iterator(cfg, tcfg.seq_len, tcfg.global_batch, seed=tcfg.seed)
+
+    # -- run -----------------------------------------------------------------
+    def _device_batch(self, batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for k, v in batch.items():
+            if self.mesh is not None:
+                dims = (self.plan.batch(v.shape[0]),) + (None,) * (v.ndim - 1)
+                out[k] = jax.device_put(v, NamedSharding(self.mesh, jax.sharding.PartitionSpec(*dims)))
+            else:
+                out[k] = jnp.asarray(v)
+        return out
+
+    def run(self, n_steps: int, *, fail_at: Optional[int] = None) -> Dict[str, Any]:
+        """Run steps; optionally raise a simulated failure at ``fail_at``."""
+        losses = []
+        t0 = time.perf_counter()
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            for i in range(n_steps):
+                step_now = int(self.state.step)
+                if fail_at is not None and step_now == fail_at:
+                    raise SimulatedFailure(f"injected failure at step {step_now}")
+                batch = self._device_batch(next(self._data))
+                self.state, metrics = self._step(self.state, batch)
+                losses.append(float(metrics["loss"]))
+                if self.ckpt is not None:
+                    self.ckpt.maybe_save(self.state, int(self.state.step))
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        dt = time.perf_counter() - t0
+        return {
+            "losses": losses,
+            "steps": len(losses),
+            "seconds": dt,
+            "final_step": int(self.state.step),
+        }
+
+    # -- fault tolerance / elasticity -----------------------------------------
+    def restore_latest(self) -> int:
+        assert self.ckpt is not None, "no checkpoint dir configured"
+        self.ckpt.wait()
+        shape = jax.eval_shape(lambda: self.state)
+        self.state = self.ckpt.restore(shape, self._state_shardings)
+        return int(self.state.step)
+
+    def resize(self, new_mesh: Optional[Mesh]) -> None:
+        """Elastic re-mesh: rebuild plan/step under ``new_mesh`` and reload
+        the latest checkpoint with the new shardings."""
+        assert self.ckpt is not None, "elastic resize requires checkpointing"
+        self.ckpt.wait()
+        self.mesh = new_mesh
+        self.plan = make_plan(new_mesh, n_heads=self.cfg.n_heads,
+                              n_kv_heads=self.cfg.n_kv_heads,
+                              prefer=self.cfg.attn_parallelism,
+                              global_batch=self.tcfg.global_batch)
+        self._build()
+        if self.ckpt.latest_step() is not None:
+            self.restore_latest()
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

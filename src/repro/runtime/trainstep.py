@@ -1,0 +1,192 @@
+"""Train / prefill / serve step builders + parameter sharding specs.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit(..., donate_argnums=0)``; the dry-run lowers exactly
+this function. Parameter sharding (FSDP x TP) is resolved per-tensor from the
+key-path name rules below; optimizer states inherit parameter specs (ZeRO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingPlan
+from repro.models import decode_step, init_cache, loss_fn, prefill
+from repro.models.config import ArchConfig
+from repro.optim.optimizers import Optimizer, global_norm
+
+Params = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt_state: Params
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step), None),
+    lambda aux, ch: TrainState(*ch),
+)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (FSDP over "data", TP/EP over "model")
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(plan: ShardingPlan, names: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+    if plan.mesh is None:
+        return P()
+    name = names[-1]
+    # leading stacked-unit dim from lax.scan parameter stacking
+    off = 1 if "units" in names else 0
+    body = shape[off:]
+    dims: list = [None] * len(shape)
+
+    def md(size):
+        return plan.model_dim(size)
+
+    def fs(size):
+        return plan.fsdp_dim(size)
+
+    if name in ("vr", "vc"):  # adafactor factored stats: tiny, replicate
+        return P(*dims)
+    if name == "embed" and len(body) == 2:
+        dims[off:] = [md(body[0]), fs(body[1])]
+    elif name == "head" and len(body) == 2:
+        dims[off:] = [fs(body[0]), md(body[1])]
+    elif name in ("wq", "wk", "wv", "w_in", "w_up", "w_x", "w_gate", "w_rec_in",
+                  "router", "w_a", "w_i") and len(body) == 2:
+        dims[off:] = [fs(body[0]), md(body[1])]
+    elif name in ("wo", "w_out", "w_down") and len(body) == 2:
+        dims[off:] = [md(body[0]), fs(body[1])]
+    elif name == "w_in" and len(body) == 3:  # MoE experts (E, d, 2f)
+        dims[off:] = [md(body[0]), fs(body[1]), None]
+    elif name == "w_out" and len(body) == 3:  # MoE experts (E, f, d)
+        dims[off:] = [md(body[0]), None, fs(body[1])]
+    elif name in ("bq", "bk", "bv", "lam") and len(body) == 1:
+        dims[off] = md(body[0])
+    # norms / scales / small recurrent blocks stay replicated
+    return P(*dims)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"#{p.idx}")
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def param_specs(cfg: ArchConfig, plan: ShardingPlan, params_shape: Params) -> Params:
+    """PartitionSpec pytree matching ``params_shape`` (shapes or arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    if not cfg.fsdp:
+        # replicate everything except the (possibly huge) vocab-dim tensors
+        specs = []
+        for path, leaf in flat:
+            names = _path_names(path)
+            if names[-1] in ("embed", "head") and plan.mesh is not None:
+                specs.append(_param_spec(plan, names, tuple(leaf.shape)))
+            else:
+                specs.append(P())
+        return jax.tree_util.tree_unflatten(treedef, specs)
+    specs = [_param_spec(plan, _path_names(path), tuple(leaf.shape)) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_specs(cfg: ArchConfig, plan: ShardingPlan, state_shape: TrainState) -> TrainState:
+    return TrainState(
+        params=param_specs(cfg, plan, state_shape.params),
+        opt_state=param_specs(cfg, plan, state_shape.opt_state),
+        step=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, plan: ShardingPlan, optimizer: Optimizer
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        mb = max(1, cfg.microbatches)
+        if mb == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, plan, p, batch))(state.params)
+        else:
+            # gradient accumulation: python-unrolled so the dry-run's
+            # cost_analysis counts every microbatch (lax.scan bodies are
+            # counted once — see §Dry-run calibration note)
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            loss = jnp.zeros((), jnp.float32)
+            grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            for i in range(mb):
+                b_i = jax.tree.map(lambda x: x[i], mbs)
+                l_i, g_i = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, plan, p, b_i))(state.params)
+                loss = loss + l_i
+                grads = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                     grads, g_i)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        if cfg.grad_spec_constraint and plan.mesh is not None:
+            # Pin gradients to the parameter sharding *before* the optimizer:
+            # the partitioner can then lower the cross-replica reduction as
+            # reduce-scatter (into the shard) instead of all-reduce + slice.
+            gspecs = param_specs(cfg, plan, grads)
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, jax.sharding.NamedSharding(plan.mesh, s)),
+                grads, gspecs)
+        new_params, new_opt = optimizer.update(grads, state.opt_state, state.params,
+                                               state.step)
+        metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "step": state.step,
+        }
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, plan: ShardingPlan, cache_len: int):
+    def prefill_step(params: Params, batch: Dict):
+        return prefill(cfg, plan, params, batch, cache_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, plan: ShardingPlan):
+    """One decode step: greedy-sample next token from logits."""
+
+    def serve_step(params: Params, cache: Params, tokens: jnp.ndarray):
+        new_cache, logits = decode_step(cfg, plan, params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1, : cfg.vocab], axis=-1).astype(jnp.int32)
+        return new_cache, next_tok[:, None], logits
+
+    return serve_step

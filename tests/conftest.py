@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Make src/ importable without installation. Do NOT set
+# xla_force_host_platform_device_count here — smoke tests must see the single
+# real CPU device (the dry-run owns the 512-device setting in its own
+# process; distributed tests spawn subprocesses).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

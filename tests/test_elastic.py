@@ -1,0 +1,98 @@
+"""Job-level elastic OEF (paper §8 extension) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import oef
+from repro.core.elastic import ElasticJob, ElasticTenant, solve_elastic_coop
+
+
+def test_reduces_to_coop_oef_when_linear():
+    """alpha=1 + non-binding max_workers == standard cooperative OEF."""
+    W = np.array([[1.0, 2.0], [1.0, 3.0], [1.0, 4.0]])
+    m = np.array([1.0, 1.0])
+    tenants = [
+        ElasticTenant(f"u{i}", (ElasticJob(f"j{i}", tuple(W[i]), max_workers=8,
+                                           alpha=1.0),))
+        for i in range(3)
+    ]
+    ea = solve_elastic_coop(tenants, m)
+    coop = oef.solve_coop(W, m)
+    assert ea.total_utility == pytest.approx(coop.total_efficiency, rel=1e-6)
+
+
+@given(st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_elastic_capacity_and_segments(seed):
+    rng = np.random.default_rng(seed)
+    n, k = int(rng.integers(2, 4)), int(rng.integers(2, 3))
+    m = rng.integers(2, 6, k).astype(float)
+    tenants = []
+    for i in range(n):
+        speed = tuple(np.cumsum(rng.uniform(0.2, 1.0, k)) / 1.0)
+        tenants.append(ElasticTenant(
+            f"u{i}", (ElasticJob(f"j{i}", speed, max_workers=int(rng.integers(2, 5)),
+                                 alpha=float(rng.uniform(0.5, 1.0))),)))
+    ea = solve_elastic_coop(tenants, m)
+    # capacity respected
+    totals = np.zeros(k)
+    for t in ea.X.values():
+        for x in t.values():
+            totals += x
+            assert np.all(x >= -1e-9)
+    assert np.all(totals <= m + 1e-6)
+    # no job exceeds its max workers
+    for tn, jobs in ea.X.items():
+        ten = next(t for t in tenants if t.name == tn)
+        for jn, x in jobs.items():
+            job = next(j for j in ten.jobs if j.name == jn)
+            assert x.sum() <= job.max_workers + 1e-6
+
+
+def test_diminishing_returns_spread_allocation():
+    """With strong concavity, the optimum spreads devices across tenants
+    instead of concentrating on the fastest job (unlike alpha=1)."""
+    m = np.array([0.0, 4.0])
+    fast = ElasticTenant("fast", (ElasticJob("f", (1.0, 4.0), max_workers=4,
+                                             alpha=0.3),))
+    slow = ElasticTenant("slow", (ElasticJob("s", (1.0, 3.0), max_workers=4,
+                                             alpha=0.3),))
+    ea = solve_elastic_coop([fast, slow], m)
+    assert ea.X["slow"]["s"][1] > 0.5, "concavity should give the slow tenant share"
+
+
+def test_elastic_beats_scaling_unaware_allocation():
+    """Without fairness constraints, the elasticity-aware LP dominates any
+    scaling-unaware allocation evaluated under the true concave utilities
+    (LP optimality: the rigid point is feasible)."""
+    from repro.core.elastic import rigid_equivalent
+
+    m = np.array([3.0, 3.0])
+    tenants = [
+        ElasticTenant("a", (ElasticJob("a0", (1.0, 2.0), max_workers=4, alpha=0.8),)),
+        ElasticTenant("b", (ElasticJob("b0", (1.0, 3.5), max_workers=4, alpha=0.8),)),
+    ]
+    ea = solve_elastic_coop(tenants, m, envy_free=False)
+    rigid = rigid_equivalent(tenants, m)
+    assert ea.total_utility >= rigid - 1e-6
+
+
+def test_conservative_ef_implies_true_envy_freeness():
+    """The linearized EF bound over-protects: under it, no tenant prefers
+    another's bundle even when re-evaluated with exact segment utilities."""
+    from repro.core.elastic import segment_utility
+
+    m = np.array([2.0, 4.0])
+    tenants = [
+        ElasticTenant("a", (ElasticJob("a0", (1.0, 1.8), max_workers=4, alpha=0.7),)),
+        ElasticTenant("b", (ElasticJob("b0", (1.0, 3.0), max_workers=4, alpha=0.7),)),
+    ]
+    ea = solve_elastic_coop(tenants, m, envy_free=True)
+    for t in tenants:
+        own = ea.utility[t.name]
+        for s in tenants:
+            if s.name == t.name:
+                continue
+            bundle = sum(ea.X[s.name].values())
+            best_rearranged = max(segment_utility(j, bundle) for j in t.jobs)
+            assert own >= best_rearranged - 1e-6

@@ -1,0 +1,55 @@
+"""Unit tests for the HLO collective-bytes parser used by the roofline."""
+from repro.launch.hlo_analysis import collective_stats, _shapes_bytes
+
+
+HLO = """
+HloModule jit_f
+
+ENTRY %main (p0: bf16[128,512]) -> bf16[128,512] {
+  %p0 = bf16[128,512]{1,0} parameter(0)
+  %ag = bf16[2048,512]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={0}
+  %ar = bf16[128,512]{1,0} all-reduce(%p0), to_apply=%add
+  %rs = bf16[64,512]{1,0} reduce-scatter(%p0), dimensions={0}
+  %a2a = bf16[128,512]{1,0} all-to-all(%p0), dimensions={0}
+  %agt = (bf16[16,4]{1,0}, bf16[64,4]{1,0}) all-gather-start(%small), dimensions={0}
+  %small = bf16[16,4]{1,0} parameter(1)
+  ROOT %out = bf16[128,512]{1,0} add(%ar, %a2a)
+}
+"""
+
+
+def test_shapes_bytes():
+    assert _shapes_bytes("bf16[128,512]{1,0}") == 128 * 512 * 2
+    assert _shapes_bytes("f32[4,4]{1,0}, s32[8]{0}") == 64 + 32
+    assert _shapes_bytes("pred[]") == 1
+
+
+def test_collective_stats_counts_ops():
+    st = collective_stats(HLO)
+    per = st["per_op"]
+    assert per["all-gather"]["count"] == 2  # plain + -start; -done not present
+    assert per["all-reduce"]["count"] == 1
+    assert per["reduce-scatter"]["count"] == 1
+    assert per["all-to-all"]["count"] == 1
+    p0 = 128 * 512 * 2
+    # all-gather wire = result bytes (gathered)
+    assert per["all-gather"]["wire_bytes"] >= 2048 * 512 * 2
+    # all-reduce wire = 2x operand
+    assert per["all-reduce"]["wire_bytes"] == 2 * p0
+    # reduce-scatter / all-to-all = 1x operand
+    assert per["reduce-scatter"]["wire_bytes"] == p0
+    assert per["all-to-all"]["wire_bytes"] == p0
+
+
+def test_tuple_result_start_op():
+    st = collective_stats(HLO)
+    # the -start op's tuple result parsed (16*4 + 64*4 bf16)
+    ag = st["per_op"]["all-gather"]
+    assert ag["wire_bytes"] > 2048 * 512 * 2  # includes the tuple result op
+
+
+def test_done_ops_not_double_counted():
+    txt = HLO + "\n  %agd = bf16[64,4]{1,0} all-gather-done(%agt)\n"
+    a = collective_stats(HLO)["per_op"]["all-gather"]["count"]
+    b = collective_stats(txt)["per_op"]["all-gather"]["count"]
+    assert a == b

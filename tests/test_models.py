@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (reduced configs, CPU): forward/train step
+shape + finiteness, decode==full-forward consistency, chunked-xent parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, ALIASES, get_config, get_smoke
+from repro.distributed.sharding import make_plan
+from repro.models import decode_step, init_params, input_specs, loss_fn, prefill
+from repro.models.model import _embed_inputs, _encode, backbone, logits_of
+
+
+def _plan(cfg):
+    return make_plan(None, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads)
+
+
+def _batch(cfg, B, S, key, with_targets=True):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(ks[0], (B, S, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    elif cfg.input_kind == "embeddings":
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    if with_targets:
+        batch["targets"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    plan = _plan(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 32, jax.random.PRNGKey(1))
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: loss_fn(cfg, plan, p, batch)))(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_matches_full_forward(arch):
+    cfg = get_smoke(arch)
+    plan = _plan(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 33
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.encoder_layers:
+        frames = jax.random.normal(key, (B, 16, cfg.d_model), jnp.bfloat16)
+        bf = {"frames": frames, "tokens": toks}
+        bp = {"frames": frames, "tokens": toks[:, :-1]}
+    elif cfg.input_kind == "embeddings":
+        emb = jnp.take(params["embed"].astype(jnp.bfloat16), toks, axis=0) * np.sqrt(cfg.d_model)
+        bf, bp = {"embeds": emb}, {"embeds": emb[:, :-1]}
+    else:
+        bf, bp = {"tokens": toks}, {"tokens": toks[:, :-1]}
+    memory = _encode(cfg, plan, params, bf["frames"]) if cfg.encoder_layers else None
+    x = _embed_inputs(cfg, plan, params, bf)
+    h, _ = backbone(cfg, plan, params, x, memory=memory, causal=True)
+    lf = logits_of(cfg, plan, params, h)
+    cache, lg_pre = prefill(cfg, plan, params, bp, cache_len=S + 8)
+    _, lg_dec = decode_step(cfg, plan, params, cache, toks[:, -1:])
+    a = np.asarray(lf[:, -2], np.float32)
+    b = np.asarray(lg_pre[:, 0], np.float32)
+    c = np.asarray(lf[:, -1], np.float32)
+    d = np.asarray(lg_dec[:, 0], np.float32)
+    scale = np.max(np.abs(a)) + 1e-6
+    assert np.max(np.abs(a - b)) / scale < 0.05, "prefill logits diverge from full forward"
+    assert np.max(np.abs(c - d)) / (np.max(np.abs(c)) + 1e-6) < 0.05, \
+        "decode logits diverge from full forward"
+
+
+def test_chunked_xent_matches_dense():
+    import dataclasses
+
+    cfg = get_smoke("qwen2-1.5b")
+    plan = _plan(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 64, jax.random.PRNGKey(1))
+    dense = float(loss_fn(cfg, plan, params, batch))
+    cfg_c = dataclasses.replace(cfg, logits_chunk=16)
+    chunked = float(loss_fn(cfg_c, plan, params, batch))
+    assert abs(dense - chunked) < 5e-3 * max(1.0, abs(dense))
+
+
+def test_blocked_attention_matches_xla():
+    import dataclasses
+
+    cfg = get_smoke("yi-9b")
+    plan = _plan(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 64, jax.random.PRNGKey(1))
+    base = float(loss_fn(cfg, plan, params, batch))
+    cfg_b = dataclasses.replace(cfg, attention_impl="blocked",
+                                attention_block_q=32, attention_block_kv=32)
+    blocked = float(loss_fn(cfg_b, plan, params, batch))
+    assert abs(base - blocked) < 5e-3 * max(1.0, abs(base))
+
+
+def test_blocked_attention_sliding_matches_xla():
+    import dataclasses
+
+    cfg = get_smoke("gemma3-4b")
+    plan = _plan(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 128, jax.random.PRNGKey(1))
+    base = float(loss_fn(cfg, plan, params, batch))
+    cfg_b = dataclasses.replace(cfg, attention_impl="blocked",
+                                attention_block_q=32, attention_block_kv=32)
+    blocked = float(loss_fn(cfg_b, plan, params, batch))
+    assert abs(base - blocked) < 5e-3 * max(1.0, abs(base))
+
+
+@pytest.mark.parametrize("arch", list(ALIASES.keys()))
+def test_full_config_exact_dims(arch):
+    """The full (assigned) configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_moe_configs():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert (kimi.n_experts, kimi.top_k) == (384, 8)
+    assert kimi.param_count() > 0.9e12  # ~1T total
+    assert kimi.active_param_count() < 0.05e12  # ~32B active
+    arctic = get_config("arctic-480b")
+    assert (arctic.n_experts, arctic.top_k) == (128, 2)
+    assert arctic.moe_dense_residual
+    assert 3.5e11 < arctic.param_count() < 6e11  # ~480B
+
+
+def test_long_context_applicability():
+    longs = {a: get_config(a).supports_long_context for a in ALIASES}
+    assert longs["xlstm-350m"] and longs["recurrentgemma-2b"] and longs["gemma3-4b"]
+    for a in ("yi-9b", "qwen2-1.5b", "phi4-mini-3.8b", "kimi-k2-1t-a32b",
+              "arctic-480b", "phi-3-vision-4.2b", "whisper-tiny"):
+        assert not longs[a], a

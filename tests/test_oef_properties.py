@@ -1,0 +1,247 @@
+"""Property-based tests of the OEF fairness invariants (hypothesis).
+
+These encode the paper's theorems directly:
+  - Thm 5.1: cooperative OEF is envy-free, sharing-incentive and achieves the
+    LP-optimal efficiency under EF constraints;
+  - Thm 5.3: both OEF variants are Pareto-efficient;
+  - Thm 5.4: non-cooperative OEF equalizes throughput and is strategy-proof
+    (randomized inflation probes never raise the cheater's true throughput);
+  - Thm 5.2: adjacent-type allocations on consistently-ordered instances;
+  - fast water-filling solver == LP solver on ordered instances;
+  - HiGHS == self-contained simplex.
+"""
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import lp, oef, properties
+from repro.core.baselines import solve_gandiva_fair, solve_gavel, solve_maxmin
+
+TOL = 1e-6
+
+
+@st.composite
+def speedup_instances(draw, max_n=5, max_k=4, ordered=False):
+    n = draw(st.integers(2, max_n))
+    k = draw(st.integers(2, max_k))
+    if ordered:
+        # Monge instances: w_lj = a_l ** c_j with a_l, c_j ascending gives
+        # monotone rows/columns AND monotone consecutive-user ratios — the
+        # regime where the greedy water-filling solver is provably optimal.
+        a = np.cumsum([draw(st.floats(0.05, 0.8, allow_nan=False)) for _ in range(n)]) + 1.0
+        c = np.cumsum([draw(st.floats(0.05, 0.6, allow_nan=False)) for _ in range(k)])
+        c = c - c[0]  # first type normalized to speedup 1
+        W = np.power(a[:, None], c[None, :])
+    else:
+        W = np.ones((n, k))
+        for l in range(n):
+            row = 1.0
+            for j in range(1, k):
+                row = row + draw(st.floats(0.05, 3.0, allow_nan=False))
+                W[l, j] = row
+    m = np.array([draw(st.integers(1, 8)) for _ in range(k)], dtype=float)
+    return W, m
+
+
+@given(speedup_instances())
+@settings(max_examples=60, deadline=None)
+def test_coop_is_envy_free_and_sharing_incentive(inst):
+    W, m = inst
+    alloc = oef.solve_coop(W, m)
+    assert properties.is_envy_free(W, alloc.X, tol=1e-5)
+    assert properties.is_sharing_incentive(W, alloc.X, m, tol=1e-5)
+
+
+@given(speedup_instances())
+@settings(max_examples=40, deadline=None)
+def test_coop_is_pareto_efficient_within_domain(inst):
+    W, m = inst
+    alloc = oef.solve_coop(W, m)
+    assert properties.pareto_improvement_value(W, alloc.X, m, within="envy-free") <= 1e-4
+
+
+def test_coop_global_pe_counterexample():
+    """Regression: coop OEF is NOT globally (DRF-strong) Pareto-efficient —
+    an envy-violating allocation can Pareto-dominate. Documented deviation
+    from the paper's Thm 5.3 reading (see EXPERIMENTS.md)."""
+    W = np.array([
+        [1.0, 6.091, 10.771],
+        [1.0, 1.609, 1.934],
+        [1.0, 2.142, 2.515],
+        [1.0, 1.837, 3.500],
+        [1.0, 9.424, 16.585],
+    ])
+    m = np.array([8.0, 5.0, 1.0])
+    alloc = oef.solve_coop(W, m)
+    assert properties.pareto_improvement_value(W, alloc.X, m, within="envy-free") <= 1e-4
+    assert properties.pareto_improvement_value(W, alloc.X, m) > 0.1  # global PE fails
+
+
+@given(speedup_instances())
+@settings(max_examples=40, deadline=None)
+def test_noncoop_equal_throughput_and_pe(inst):
+    W, m = inst
+    alloc = oef.solve_noncoop(W, m)
+    tps = alloc.throughput
+    assert np.max(np.abs(tps - tps[0])) <= 1e-5 * max(1.0, abs(tps[0]))
+    # PE within the equal-throughput family (Thm 5.3's feasible domain)
+    assert properties.pareto_improvement_value(
+        W, alloc.X, m, within="equal-throughput") <= 1e-4
+
+
+@given(speedup_instances(max_n=4, max_k=3), st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_noncoop_strategy_proof_probe(inst, user_seed):
+    W, m = inst
+    user = user_seed % W.shape[0]
+    probe = properties.strategy_proofness_probe(
+        lambda Wx, mx: oef.solve_noncoop(Wx, mx), W, m, user,
+        n_trials=8, rng=np.random.default_rng(user_seed))
+    assert probe.gain <= 1e-5 * max(1.0, probe.honest_throughput)
+
+
+@given(speedup_instances(max_n=4, max_k=3), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_efficiency_only_is_not_strategy_proof_sometimes(inst, seed):
+    # sanity: the probe CAN detect violations (efficiency-only mechanism).
+    # We don't assert violation per-instance (not every instance admits one),
+    # just that the probe machinery returns sane values.
+    W, m = inst
+    probe = properties.strategy_proofness_probe(
+        lambda Wx, mx: oef.solve_efficiency_only(Wx, mx), W, m, 0,
+        n_trials=4, rng=np.random.default_rng(seed))
+    assert np.isfinite(probe.honest_throughput)
+
+
+@given(speedup_instances(ordered=True))
+@settings(max_examples=40, deadline=None)
+def test_fast_solver_matches_lp_on_ordered_instances(inst):
+    W, m = inst
+    a = oef.solve_noncoop(W, m)
+    b = oef.solve_noncoop_fast(W, m)
+    assert b.meta.get("fast_path", False)
+    tau_lp = a.meta["tau"]
+    tau_fast = b.meta["tau"]
+    assert abs(tau_lp - tau_fast) <= 1e-6 * max(1.0, tau_lp)
+
+
+def test_fast_solver_falls_back_on_non_monge():
+    """Comparative advantage counterexample: elementwise-ordered but not
+    ratio-monotone — the greedy staircase is suboptimal, so the fast solver
+    must detect it and fall back to the LP."""
+    W = np.array([[1.0, 1.5, 2.5], [1.0, 2.0, 3.0]])
+    m = np.array([1.0, 1.0, 1.0])
+    b = oef.solve_noncoop_fast(W, m)
+    assert b.meta.get("fast_path", True) is False
+    a = oef.solve_noncoop(W, m)
+    assert abs(a.meta["tau"] - np.einsum("k,k->", W[0], b.X[0])) < 1e-6
+
+
+@given(speedup_instances(ordered=True))
+@settings(max_examples=30, deadline=None)
+def test_adjacency_on_ordered_instances(inst):
+    W, m = inst
+    alloc = oef.solve_noncoop_fast(W, m)
+    assert properties.adjacency_ok(alloc.X, tol=1e-7)
+
+
+@given(speedup_instances(max_n=4, max_k=3))
+@settings(max_examples=30, deadline=None)
+def test_simplex_matches_highs(inst):
+    W, m = inst
+    n, k = W.shape
+    c = W.ravel()
+    A_ub, b_ub = oef._capacity_constraints(n, k, m)
+    r1 = lp.solve_lp(c, A_ub, b_ub, method="highs")
+    r2 = lp.solve_lp(c, A_ub, b_ub, method="simplex")
+    assert r1.ok and r2.ok
+    assert abs(r1.fun - r2.fun) <= 1e-6 * max(1.0, abs(r1.fun))
+
+
+@given(speedup_instances())
+@settings(max_examples=30, deadline=None)
+def test_coop_efficiency_dominates_baselines(inst):
+    """Optimal efficiency under EF: coop OEF >= every baseline that happens
+    to be envy-free, and >= max-min always."""
+    W, m = inst
+    coop = properties.total_efficiency(W, oef.solve_coop(W, m).X)
+    mm = properties.total_efficiency(W, solve_maxmin(W, m).X)
+    assert coop >= mm - 1e-6
+    gv = solve_gavel(W, m)
+    gf = solve_gandiva_fair(W, m)
+    for base in (gv, gf):
+        if properties.is_envy_free(W, base.X):
+            assert coop >= properties.total_efficiency(W, base.X) - 1e-5
+
+
+@given(speedup_instances())
+@settings(max_examples=30, deadline=None)
+def test_gandiva_fair_is_sharing_incentive(inst):
+    W, m = inst
+    alloc = solve_gandiva_fair(W, m)
+    assert properties.is_sharing_incentive(W, alloc.X, m, tol=1e-6)
+    # trading conserves capacity
+    assert np.all(alloc.X.sum(axis=0) <= m + 1e-9)
+    assert np.all(alloc.X >= -1e-9)
+
+
+@given(speedup_instances())
+@settings(max_examples=30, deadline=None)
+def test_gavel_is_sharing_incentive(inst):
+    W, m = inst
+    alloc = solve_gavel(W, m)
+    assert properties.is_sharing_incentive(W, alloc.X, m, tol=1e-4)
+
+
+def test_paper_examples_exact():
+    """Digit-level reproduction of §2.4 / §3.1 worked examples."""
+    W = np.array([[1, 2], [1, 3], [1, 4.]])
+    m = np.array([1.0, 1.0])
+    # Eq (2): coop OEF optimal allocation
+    coop = oef.solve_coop(W, m)
+    assert abs(coop.total_efficiency - 4.5) < 1e-6
+    np.testing.assert_allclose(sorted(coop.throughput), [1.0, 1.5, 2.0], atol=1e-6)
+    # Gandiva_fair trading: X = [[1,.0889],[0,.4667],[0,.4444]]
+    gf = solve_gandiva_fair(W, m)
+    np.testing.assert_allclose(gf.X[:, 1], [4 / 45, 21 / 45, 4 / 9], atol=1e-9)
+    assert not properties.is_envy_free(W, gf.X)  # u3 prefers u2's allocation
+    # Gandiva_fair cheating: u1 reports 2.8, wins more fast-GPU share
+    Wf = np.array([[1, 2.8], [1, 3], [1, 4.]])
+    gff = solve_gandiva_fair(Wf, m)
+    assert gff.X[0, 1] > gf.X[0, 1] + 1e-3  # SP violated by Gandiva_fair
+    # Eq (6): coop with W=[[1,2],[1,5]] -> X=[[1,.25],[0,.75]], eff 5.25
+    W2 = np.array([[1, 2], [1, 5.]])
+    c2 = oef.solve_coop(W2, m)
+    assert abs(c2.total_efficiency - 5.25) < 1e-6
+    np.testing.assert_allclose(c2.X, [[1, 0.25], [0, 0.75]], atol=1e-6)
+
+
+def test_weighted_oef_replication():
+    """§4.2.3: pi_2 = 2 gives u2 twice u1's throughput (non-coop)."""
+    from repro.core.types import ClusterSpec, JobTypeProfile, Tenant
+
+    cluster = ClusterSpec(types=("slow", "fast"), m=(1, 1))
+    t1 = Tenant("u1", (JobTypeProfile("a", (1.0, 2.0)),), weight=1.0)
+    t2 = Tenant("u2", (JobTypeProfile("b", (1.0, 5.0)),), weight=2.0)
+    ta = oef.evaluate_tenants([t1, t2], cluster, mode="noncooperative")
+    tp1 = ta.tenant_throughput("u1", {"a": np.array([1.0, 2.0])})
+    tp2 = ta.tenant_throughput("u2", {"b": np.array([1.0, 5.0])})
+    assert abs(tp2 - 2 * tp1) < 1e-5
+
+
+def test_multi_jobtype_virtual_users():
+    """§4.2.4: two job types of one tenant each get half the tenant weight."""
+    from repro.core.types import ClusterSpec, JobTypeProfile, Tenant
+
+    cluster = ClusterSpec(types=("slow", "fast"), m=(1, 1))
+    t1 = Tenant("u1", (JobTypeProfile("a", (1.0, 2.0)), JobTypeProfile("c", (1.0, 3.0))))
+    t2 = Tenant("u2", (JobTypeProfile("b", (1.0, 5.0)),))
+    ta = oef.evaluate_tenants([t1, t2], cluster, mode="noncooperative")
+    # virtual rows: a, c each weight 1/2; b weight 1 (2 replicas after lcm)
+    W_by = {"a": np.array([1.0, 2.0]), "c": np.array([1.0, 3.0])}
+    tp_a = float(np.dot(W_by["a"], ta.per_job_type["u1"]["a"]))
+    tp_c = float(np.dot(W_by["c"], ta.per_job_type["u1"]["c"]))
+    tp1 = tp_a + tp_c
+    tp2 = ta.tenant_throughput("u2", {"b": np.array([1.0, 5.0])})
+    assert abs(tp_a - tp_c) < 1e-5  # equal split within the tenant
+    assert abs(tp1 - tp2) < 1e-5  # equal across tenants

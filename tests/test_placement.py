@@ -1,0 +1,103 @@
+"""Rounding placer (§4.3) properties: long-run convergence, capacity safety,
+min-demand gating with redistribution, single-type preference."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import JobRequest, RoundingPlacer
+
+
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(2, 4))
+@settings(max_examples=25, deadline=None)
+def test_rounding_long_run_convergence(seed, n, k):
+    """Time-averaged integer grants converge to the fractional ideal."""
+    rng = np.random.default_rng(seed)
+    m = rng.integers(2, 12, k)
+    # random fractional allocation with column sums <= m
+    X = rng.uniform(0, 1, (n, k))
+    X = X / X.sum(axis=0, keepdims=True) * (m * rng.uniform(0.6, 1.0, k))
+    placer = RoundingPlacer(n, m)
+    grants = []
+    for _ in range(400):
+        grants.append(placer.round_shares(X.copy()))
+    avg = np.mean(grants, axis=0)
+    assert np.max(np.abs(avg - X)) < 0.08, f"avg grants {avg} diverge from ideal {X}"
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_rounding_capacity_never_exceeded(seed):
+    rng = np.random.default_rng(seed)
+    n, k = int(rng.integers(2, 8)), int(rng.integers(2, 4))
+    m = rng.integers(1, 10, k)
+    placer = RoundingPlacer(n, m)
+    for _ in range(80):
+        X = rng.uniform(0, 1, (n, k))
+        X = X / np.maximum(X.sum(axis=0, keepdims=True), 1e-9) * m
+        real = placer.round_shares(X)
+        assert np.all(real >= 0)
+        assert np.all(real.sum(axis=0) <= m)
+
+
+def test_min_demand_gating_and_redistribution():
+    m = [4, 4]
+    placer = RoundingPlacer(3, m)
+    X = np.array([[1.6, 0.0], [1.4, 0.0], [1.0, 4.0]])
+    real = placer.round_shares(X, min_demand=np.array([4, 4, 1]))
+    # users 0/1 need 4 devices minimum -> gated to zero; their devices are
+    # redistributed to user 2 (min demand 1)
+    assert real[0].sum() == 0 and real[1].sum() == 0
+    assert real[2].sum() >= 5
+    assert real.sum(axis=0)[0] <= 4 and real.sum(axis=0)[1] <= 4
+
+
+def test_gated_user_eventually_runs():
+    """Deviation accumulation guarantees a starved tenant gets a turn."""
+    m = [4]
+    placer = RoundingPlacer(2, m)
+    X = np.array([[1.0], [3.0]])
+    got_turn = False
+    for t in range(12):
+        real = placer.round_shares(X.copy(), min_demand=np.array([2, 1]))
+        if real[0, 0] >= 2:
+            got_turn = True
+    assert got_turn, "min-demand user starved despite deviation accumulation"
+
+
+def test_single_type_preference():
+    placer = RoundingPlacer(1, [4, 4], devices_per_host=4)
+    real = np.array([[2, 4]])
+    jobs = [JobRequest(user=0, job_id="j0", workers=4)]
+    res = placer.place(real, jobs)
+    types = {j for j, _, _ in res.assignments["j0"]}
+    assert len(types) == 1, "job split across types despite a single-type fit"
+    assert res.cross_type_workers == 0
+
+
+def test_cross_type_fallback_when_unavoidable():
+    placer = RoundingPlacer(1, [2, 2], devices_per_host=4)
+    real = np.array([[2, 2]])
+    jobs = [JobRequest(user=0, job_id="j0", workers=4)]
+    res = placer.place(real, jobs)
+    assert "j0" in res.assignments
+    assert res.cross_type_workers == 4  # must straddle both types
+
+
+def test_naive_placement_worse_or_equal_locality():
+    rng = np.random.default_rng(0)
+    placer = RoundingPlacer(4, [8, 8], devices_per_host=4)
+    real = np.array([[2, 2], [2, 2], [2, 2], [2, 2]])
+    jobs = [JobRequest(user=u, job_id=f"j{u}-{i}", workers=w)
+            for u in range(4) for i, w in enumerate((4,))]
+    opt = placer.place(real, jobs)
+    nai = placer.place(real, jobs, naive=True)
+    assert nai.cross_type_workers >= opt.cross_type_workers
+
+
+def test_sticky_placement_reuses_assignment():
+    placer = RoundingPlacer(1, [8], devices_per_host=4)
+    real = np.array([[4]])
+    jobs = [JobRequest(user=0, job_id="j0", workers=4)]
+    first = placer.place(real, jobs)
+    second = placer.place(real, jobs, prev=first.assignments)
+    assert second.assignments["j0"] == first.assignments["j0"]

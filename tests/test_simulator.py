@@ -1,0 +1,68 @@
+"""Cluster-simulator behaviour: determinism, conservation, fault tolerance,
+policy sanity."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec, paper_job_type
+from repro.core.simulator import ClusterSimulator, SimJob, SimTenant, make_synthetic_tenants
+
+
+def _tenants(n=6, seed=0, **kw):
+    jts = [paper_job_type(n_) for n_ in ("vgg", "lstm", "resnet", "transformer")]
+    return make_synthetic_tenants(n, jts, jobs_per_tenant=4, mean_work_s=2000,
+                                  seed=seed, **kw)
+
+
+def test_simulator_deterministic():
+    a = ClusterSimulator(ClusterSpec.paper_cluster(), _tenants(), policy="oef-coop",
+                         seed=3).run(100)
+    b = ClusterSimulator(ClusterSpec.paper_cluster(), _tenants(), policy="oef-coop",
+                         seed=3).run(100)
+    assert a.jcts == b.jcts
+    assert a.total_work_done == b.total_work_done
+
+
+@pytest.mark.parametrize("policy", ["oef-coop", "oef-noncoop", "gavel", "gandiva-fair",
+                                    "max-min"])
+def test_all_policies_complete_work(policy):
+    res = ClusterSimulator(ClusterSpec.paper_cluster(), _tenants(), policy=policy,
+                           seed=1).run(400)
+    expected = sum(j.total_work for t in _tenants() for j in t.jobs)
+    assert res.total_work_done == pytest.approx(expected, rel=1e-6)
+    assert len(res.jcts) == sum(len(t.jobs) for t in _tenants())
+
+
+def test_host_failures_slow_but_do_not_wedge():
+    ok = ClusterSimulator(ClusterSpec.paper_cluster(), _tenants(seed=2),
+                          policy="oef-coop", seed=5).run(500)
+    faulty = ClusterSimulator(ClusterSpec.paper_cluster(), _tenants(seed=2),
+                              policy="oef-coop", seed=5,
+                              host_failure_prob=0.15).run(800)
+    # all jobs still finish despite failures...
+    assert len(faulty.jcts) == len(ok.jcts)
+    # ...but completion takes longer under failures
+    assert faulty.mean_jct() >= ok.mean_jct()
+
+
+def test_arrival_spread_respected():
+    tens = _tenants(seed=4, arrival_spread_rounds=10)
+    res = ClusterSimulator(ClusterSpec.paper_cluster(), tens, policy="gavel",
+                           seed=0).run(400)
+    # no job finishes before its tenant arrives
+    by_name = {t.name: t for t in tens}
+    for job_id, jct in res.jcts.items():
+        assert jct > 0
+
+
+def test_straggler_penalty_applied():
+    """A job forced across types progresses at the slowest type's speed."""
+    jt = paper_job_type("lstm")  # speedups (1, 1.62, 2.15)
+    job = SimJob(job_id="j", tenant="t", job_type="lstm", workers=8,
+                 total_work=1e9)
+    ten = SimTenant(name="t", job_types={"lstm": jt}, jobs=[job])
+    # cluster with 4 slow + 4 fast: the 8-worker job must straddle
+    sim = ClusterSimulator(ClusterSpec(types=("a", "b", "c"), m=(4, 0, 4)),
+                           [ten], policy="max-min", seed=0)
+    res = sim.run(2)
+    rate = res.records[0].tenant_actual["t"]
+    assert rate == pytest.approx(8 * 1.0, rel=0.2)  # paced by slowest type
