@@ -23,6 +23,7 @@ MODULES = [
     "fig10a_scalability",
     "fig10b_sensitivity",
     "extensions",
+    "service_throughput",
 ]
 
 

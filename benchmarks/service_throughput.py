@@ -1,0 +1,74 @@
+"""Online-service benchmark: scheduler decisions/sec and re-solve latency vs
+cluster size.
+
+Replays a seeded synthetic trace through ``repro.service.OnlineScheduler``
+at three scales (tenants x devices) and reports:
+  - decision throughput (solves/sec of wall time, with events/sec context);
+  - re-solve latency mean/p95 and the incremental-reuse hit rate.
+
+Also dumps the raw numbers to ``BENCH_service.json`` at the repo root so CI
+and the docs can track regressions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.types import ClusterSpec
+from repro.service import OnlineScheduler, synthetic_trace
+from repro.service.traces import default_job_types
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_service.json")
+
+SCALES = (
+    # (n_tenants, devices-per-type multiplier)
+    (4, 1),
+    (8, 2),
+    (16, 4),
+)
+
+
+def run() -> list:
+    rows = []
+    dump = {}
+    jts = default_job_types("paper")
+    for n_tenants, scale in SCALES:
+        cluster = ClusterSpec(types=("rtx3070", "rtx3080", "rtx3090"),
+                              m=(8 * scale, 8 * scale, 8 * scale))
+        events = synthetic_trace(
+            n_tenants, job_types=jts, cluster=cluster, duration_s=3600.0,
+            mean_interarrival_s=300.0, mean_work_s=1200.0, seed=0)
+        sched = OnlineScheduler(cluster, "oef-coop", min_resolve_interval_s=30.0)
+        t0 = time.perf_counter()
+        report = sched.run(events, until=7200.0)
+        wall = time.perf_counter() - t0
+        solves_per_s = report.n_solves / max(wall, 1e-9)
+        events_per_s = report.n_events / max(wall, 1e-9)
+        tag = f"n{n_tenants}_m{8 * scale}x3"
+        rows.append((f"service/decide_{tag}", wall / max(report.n_solves, 1) * 1e6,
+                     f"{solves_per_s:.0f} solves/s {events_per_s:.0f} ev/s"))
+        rows.append((f"service/resolve_{tag}", report.resolve_latency_ms_mean * 1e3,
+                     f"p95={report.resolve_latency_ms_p95:.2f}ms "
+                     f"reused={report.n_reused_solves}/{report.n_solves}"))
+        dump[tag] = {
+            "n_tenants": n_tenants,
+            "devices": 24 * scale,
+            "wall_s": wall,
+            "n_events": report.n_events,
+            "n_solves": report.n_solves,
+            "n_reused_solves": report.n_reused_solves,
+            "solves_per_sec": solves_per_s,
+            "events_per_sec": events_per_s,
+            "resolve_latency_ms_mean": report.resolve_latency_ms_mean,
+            "resolve_latency_ms_p95": report.resolve_latency_ms_p95,
+            "jobs_finished": report.jobs_finished,
+        }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(dump, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Single verify entry point: tier-1 pytest + a short online-service smoke
+# replay. Usage: scripts/check.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q "$@"
+
+echo "== service smoke replay (~2s) =="
+python -m repro.service --policy oef-coop --tenants 3 --duration 1800 \
+    --mean-interarrival 300 --mean-work 600 --seed 0 --out /tmp/oef_service_smoke.json
+python - <<'EOF'
+import json
+with open("/tmp/oef_service_smoke.json") as f:
+    r = json.load(f)
+assert r["n_solves"] > 0 and r["jobs_finished"] > 0, r
+print(f"smoke ok: {r['n_solves']} solves, {r['jobs_finished']} jobs finished, "
+      f"{r['n_reused_solves']} reused, mean resolve {r['resolve_latency_ms_mean']:.2f} ms")
+EOF
+echo "== all checks passed =="

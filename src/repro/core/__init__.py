@@ -23,10 +23,12 @@ from .types import (  # noqa: F401
 from .lp import LPError, LPResult, solve_lp  # noqa: F401
 from .oef import (  # noqa: F401
     TenantAllocation,
+    allocation_reusable,
     evaluate_tenants,
     expand_virtual_users,
     solve_coop,
     solve_efficiency_only,
+    solve_incremental,
     solve_noncoop,
     solve_noncoop_fast,
 )

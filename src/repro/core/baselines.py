@@ -27,7 +27,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from .lp import LPError, solve_lp
-from .oef import _capacity_constraints, _solve
+from .oef import _capacity_constraints, _solve, allocation_reusable, mark_reused
 from .types import Allocation
 
 Array = np.ndarray
@@ -159,3 +159,26 @@ ALL_POLICIES = {
     "gavel": solve_gavel,
     "gandiva-fair": solve_gandiva_fair,
 }
+
+
+def solve_incremental(
+    W: Array,
+    m: Array,
+    *,
+    policy: str,
+    prev: Optional[Allocation] = None,
+    method: str = "highs",
+) -> Allocation:
+    """Incremental-solve hook for the baseline policies (online service).
+
+    The baselines have no warm-startable internal state, so the hook only
+    short-circuits the unchanged-instance case; a dirty instance is re-solved
+    from scratch exactly as in the round simulator.
+    """
+    if allocation_reusable(prev, W, m, policy=policy):
+        return mark_reused(prev)
+    if policy not in ALL_POLICIES:
+        raise ValueError(f"unknown baseline policy: {policy}")
+    if policy == "gavel":
+        return solve_gavel(W, m, method=method)
+    return ALL_POLICIES[policy](W, m)

@@ -107,7 +107,9 @@ def solve_coop(W: Array, m: Array, *, method: str = "highs") -> Allocation:
                       meta={"policy": "oef-coop", "lp": res})
 
 
-def solve_noncoop_fast(W: Array, m: Array, *, iters: int = 80) -> Allocation:
+def solve_noncoop_fast(
+    W: Array, m: Array, *, iters: int = 80, tau_hint: Optional[float] = None
+) -> Allocation:
     """Beyond-paper exact combinatorial solver for non-cooperative OEF.
 
     Exploits the adjacency structure (Thm 5.2 / Lemma 3.1): on *consistently
@@ -118,6 +120,11 @@ def solve_noncoop_fast(W: Array, m: Array, *, iters: int = 80) -> Allocation:
     tau* is found by monotone bisection on the greedy feasibility check —
     O((n + k) log(1/eps)) versus the LP's superlinear cost. Falls back to the
     LP when the instance is not consistently ordered.
+
+    ``tau_hint`` warm-starts the bisection from a previous solve's tau (the
+    online service passes the last equal-throughput level): the bracket is
+    found by exponential growth/shrink around the hint, so a re-solve after a
+    small capacity/population change converges in a handful of probes.
     """
     W = np.asarray(W, dtype=np.float64)
     m = np.asarray(m, dtype=np.float64)
@@ -148,9 +155,27 @@ def solve_noncoop_fast(W: Array, m: Array, *, iters: int = 80) -> Allocation:
                 need -= take * w
         return X
 
-    hi = float(np.max(W) * m.sum()) + 1.0
-    lo = 0.0
+    hi_cap = float(np.max(W) * m.sum()) + 1.0
+    lo, hi = 0.0, hi_cap
+    warm = tau_hint is not None and 0.0 < tau_hint < hi_cap
+    if warm:
+        if greedy(tau_hint) is not None:
+            lo = float(tau_hint)
+            probe = lo * 2.0
+            while probe < hi_cap and greedy(probe) is not None:
+                lo = probe
+                probe *= 2.0
+            hi = min(probe, hi_cap)
+        else:
+            hi = float(tau_hint)
+            probe = hi * 0.5
+            while probe > 1e-12 and greedy(probe) is None:
+                hi = probe
+                probe *= 0.5
+            lo = probe if greedy(probe) is not None else 0.0
     for _ in range(iters):
+        if hi - lo <= 1e-13 * max(hi, 1.0):
+            break
         mid = 0.5 * (lo + hi)
         if greedy(mid) is not None:
             lo = mid
@@ -161,7 +186,79 @@ def solve_noncoop_fast(W: Array, m: Array, *, iters: int = 80) -> Allocation:
     X = np.zeros_like(Xs)
     X[order] = Xs
     return Allocation(X=X, rows=tuple(f"u{i}" for i in range(n)), W=W, m=m,
-                      meta={"policy": "oef-noncoop", "tau": lo, "fast_path": True})
+                      meta={"policy": "oef-noncoop", "tau": lo, "fast_path": True,
+                            "warm_started": warm})
+
+
+# ---------------------------------------------------------------------------
+# Incremental-solve hooks (online service: dirty-state re-solve, §"Online OEF")
+# ---------------------------------------------------------------------------
+
+
+def allocation_reusable(prev: Optional[Allocation], W: Array, m: Array,
+                        *, policy: Optional[str] = None, tol: float = 1e-9) -> bool:
+    """True when ``prev`` solved exactly this instance (same W, m, policy).
+
+    The online scheduler calls this before every re-solve: arrival storms are
+    batched into one dirty set, and when an event burst cancels out (e.g. a
+    host fails and recovers between solves) the previous allocation is still
+    optimal and is reused without touching the LP.
+    """
+    if prev is None:
+        return False
+    W = np.asarray(W, dtype=np.float64)
+    m = np.asarray(m, dtype=np.float64)
+    if policy is not None and prev.meta.get("policy") != policy:
+        return False
+    return (
+        prev.W.shape == W.shape
+        and prev.m.shape == m.shape
+        and bool(np.all(np.abs(prev.W - W) <= tol))
+        and bool(np.all(np.abs(prev.m - m) <= tol))
+    )
+
+
+def mark_reused(prev: Allocation) -> Allocation:
+    """Clone ``prev`` with ``meta['reused']=True`` (meta is never shared)."""
+    return Allocation(X=prev.X, rows=prev.rows, W=prev.W, m=prev.m,
+                      meta={**prev.meta, "reused": True})
+
+
+def solve_incremental(
+    W: Array,
+    m: Array,
+    *,
+    policy: str = "oef-coop",
+    prev: Optional[Allocation] = None,
+    method: str = "highs",
+    fast: bool = True,
+) -> Allocation:
+    """Warm-started re-solve of an OEF program for the online service.
+
+    - unchanged instance  -> returns ``prev`` flagged ``reused`` (zero cost);
+    - ``oef-noncoop`` with a previous tau -> warm-starts the water-filling
+      bisection via ``tau_hint``;
+    - otherwise -> cold solve of the named policy.
+    """
+    if allocation_reusable(prev, W, m, policy=_POLICY_META.get(policy, policy)):
+        return mark_reused(prev)
+    if policy in ("oef-noncoop", "noncooperative"):
+        hint = prev.meta.get("tau") if prev is not None else None
+        if fast:
+            return solve_noncoop_fast(W, m, tau_hint=hint if isinstance(hint, float) else None)
+        return solve_noncoop(W, m, method=method)
+    if policy in ("oef-coop", "cooperative"):
+        return solve_coop(W, m, method=method)
+    if policy == "efficiency-only":
+        return solve_efficiency_only(W, m, method=method)
+    raise ValueError(f"unknown OEF policy: {policy}")
+
+
+# mode aliases -> the meta['policy'] tag written by the underlying solver
+_POLICY_META = {
+    "noncooperative": "oef-noncoop",
+    "cooperative": "oef-coop",
+}
 
 
 def _consistently_ordered(Ws: Array, tol: float = 1e-9) -> bool:
@@ -256,11 +353,21 @@ def evaluate_tenants(
     mode: str = "noncooperative",
     method: str = "highs",
     fast: bool = False,
+    prev: Optional[Allocation] = None,
 ) -> TenantAllocation:
-    """Tenant-level fair-share evaluation with weights and multi-job types."""
+    """Tenant-level fair-share evaluation with weights and multi-job types.
+
+    ``prev`` (the previous round's *row-level* allocation, i.e.
+    ``TenantAllocation.row_alloc``) enables the incremental-solve path: when
+    the expanded virtual-user instance is unchanged the old allocation is
+    reused outright, otherwise it seeds the warm start.
+    """
     W_virt, row_map, replication = expand_virtual_users(tenants, cluster.k)
     m = cluster.m_vec
-    if mode == "noncooperative":
+    if prev is not None:
+        alloc = solve_incremental(W_virt, m, policy=mode, prev=prev, method=method,
+                                  fast=fast)
+    elif mode == "noncooperative":
         alloc = solve_noncoop_fast(W_virt, m) if fast else solve_noncoop(W_virt, m, method=method)
     elif mode == "cooperative":
         alloc = solve_coop(W_virt, m, method=method)

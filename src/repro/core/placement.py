@@ -126,6 +126,7 @@ class RoundingPlacer:
         jobs_per_user_order: Optional[Dict[int, List[str]]] = None,
         naive: bool = False,
         prev: Optional[Dict[str, List[Tuple[int, int, int]]]] = None,
+        down_hosts: Optional[set] = None,
     ) -> PlacementResult:
         """Pack jobs onto hosts.
 
@@ -138,6 +139,9 @@ class RoundingPlacer:
         Gavel/Gandiva_fair "lack optimization strategies for placement"):
         FIFO order, types filled slowest-first, first-fit across hosts with
         no single-host/single-type preference.
+
+        ``down_hosts`` is a set of ``(type, host)`` pairs currently failed
+        (online service): their slots are masked so no job is placed there.
         """
         free = []  # free[j] = array of free slots per host of type j
         for j in range(self.k):
@@ -147,6 +151,10 @@ class RoundingPlacer:
             extra = slots.sum() - self.m[j]
             if extra > 0:
                 slots[-1] -= extra
+            if down_hosts:
+                for h in range(n_hosts):
+                    if (j, h) in down_hosts:
+                        slots[h] = 0
             free.append(slots)
         user_budget = real.copy().astype(np.int64)
 

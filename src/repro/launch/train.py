@@ -65,10 +65,11 @@ def _run_single(args) -> None:
     if args.mesh:
         import jax
 
+        from repro.launch.mesh import _axis_type_kwargs
+
         shape = tuple(int(x) for x in args.mesh.split("x"))
         axes = ("data", "model")[: len(shape)]
-        mesh = jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        mesh = jax.make_mesh(shape, axes, **_axis_type_kwargs(len(shape)))
     ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix=f"oef-train-{cfg.name}-")
     t = Trainer(cfg, TrainerConfig(seq_len=args.seq_len, global_batch=args.batch,
                                    peak_lr=args.lr, total_steps=args.steps,

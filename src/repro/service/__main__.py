@@ -1,0 +1,93 @@
+"""CLI for the online cluster service.
+
+Replay a CSV trace (or generate a synthetic one) through the event-driven
+OEF scheduler and emit JSON metrics:
+
+    PYTHONPATH=src python -m repro.service --policy oef-coop \\
+        --tenants 4 --duration 7200 --seed 0
+    PYTHONPATH=src python -m repro.service --trace trace.csv --policy gavel
+    PYTHONPATH=src python -m repro.service --emit-trace trace.csv --tenants 8
+
+Exit code 0 on a completed replay; the JSON report goes to stdout (or
+``--out``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .scheduler import OnlineScheduler, SERVICE_POLICIES
+from .traces import (
+    default_cluster,
+    default_job_types,
+    read_trace_csv,
+    synthetic_trace,
+    write_trace_csv,
+)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.service",
+                                 description="Online event-driven OEF cluster service")
+    ap.add_argument("--policy", choices=SERVICE_POLICIES, default="oef-coop")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="CSV trace to replay (default: generate a synthetic one)")
+    ap.add_argument("--cluster", choices=("paper", "tpu"), default="paper")
+    ap.add_argument("--tenants", type=int, default=4, help="synthetic: tenant count")
+    ap.add_argument("--duration", type=float, default=7200.0,
+                    help="synthetic: arrival horizon in seconds")
+    ap.add_argument("--until", type=float, default=None,
+                    help="stop the replay clock at this time (default: drain)")
+    ap.add_argument("--mean-interarrival", type=float, default=600.0)
+    ap.add_argument("--mean-work", type=float, default=1800.0)
+    ap.add_argument("--host-failures-per-hour", type=float, default=0.0)
+    ap.add_argument("--resolve-interval", type=float, default=30.0,
+                    help="re-solve throttle: min seconds between solves")
+    ap.add_argument("--audit-every", type=int, default=10,
+                    help="fairness-property audit every Nth solve (0 = off)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default=None, help="write JSON report here")
+    ap.add_argument("--emit-trace", type=str, default=None,
+                    help="write the (synthetic) trace as CSV and exit")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    cluster = default_cluster(args.cluster)
+    if args.trace:
+        events = read_trace_csv(args.trace)
+    else:
+        events = synthetic_trace(
+            args.tenants,
+            job_types=default_job_types(args.cluster),
+            cluster=cluster,
+            duration_s=args.duration,
+            mean_interarrival_s=args.mean_interarrival,
+            mean_work_s=args.mean_work,
+            host_failures_per_hour=args.host_failures_per_hour,
+            seed=args.seed,
+        )
+    if args.emit_trace:
+        write_trace_csv(events, args.emit_trace)
+        print(f"wrote {len(events)} events -> {args.emit_trace}", file=sys.stderr)
+        return 0
+    sched = OnlineScheduler(
+        cluster,
+        args.policy,
+        min_resolve_interval_s=args.resolve_interval,
+        audit_every=args.audit_every,
+    )
+    report = sched.run(events, until=args.until)
+    text = report.to_json()
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"report -> {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,503 @@
+"""Event-driven continuous-time OEF scheduler (the online control plane).
+
+``OnlineScheduler`` maintains live cluster state — tenants, jobs, host
+health — and reacts to events from an :class:`~repro.service.events.EventQueue`:
+
+  - world changes (submit/finish/join/leave/fail/recover/profile update) mark
+    the state *dirty*;
+  - a re-solve throttle bounds decision latency under arrival storms: dirty
+    events within ``min_resolve_interval_s`` of the last solve are batched
+    and a single deferred RESOLVE timer fires for the whole burst;
+  - re-solves go through the incremental hooks
+    (``core.oef.solve_incremental`` / ``core.baselines.solve_incremental``):
+    an unchanged instance reuses the previous :class:`Allocation` outright,
+    and non-cooperative OEF warm-starts its water-filling bisection from the
+    previous tau;
+  - fractional shares are rounded and packed by the same
+    :class:`~repro.core.placement.RoundingPlacer` the round simulator uses
+    (deviation accumulation preserved across solves), with failed hosts
+    masked out of packing;
+  - progress accounting matches the simulator's model — straggler pacing by
+    the slowest participating type (§4.4), cross-host contention penalty,
+    checkpoint/migration overhead — but in continuous time: each job carries
+    a rate, job completions are *predicted* as version-tagged JOB_FINISH
+    events and lazily invalidated when a re-solve changes the rate.
+
+:func:`crossval_static` is the cross-validation harness: on a static
+workload the service's steady-state per-tenant throughput estimates must
+agree with ``core.simulator.ClusterSimulator``'s (tested to within 1%).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+import time as _time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from ..core import baselines, oef, properties
+from ..core.placement import JobRequest, RoundingPlacer
+from ..core.simulator import SimTenant
+from ..core.types import Allocation, ClusterSpec, JobTypeProfile, Tenant
+from .events import Event, EventKind, EventQueue
+from .metrics import MetricsCollector, ServiceReport, SolveRecord
+
+Array = np.ndarray
+
+OEF_POLICIES = ("oef-noncoop", "oef-coop", "efficiency-only")
+BASELINE_POLICIES = ("max-min", "gavel", "gandiva-fair")
+SERVICE_POLICIES = OEF_POLICIES + BASELINE_POLICIES
+
+
+@dataclasses.dataclass
+class ServiceJob:
+    job_id: str
+    tenant: str
+    job_type: str
+    workers: int
+    total_work: float  # slowest-device-seconds
+    submit_time: float
+    done: float = 0.0
+    rate: float = 0.0  # slowest-device-units per second under current placement
+    resume_at: float = 0.0  # progress credited only after this (migration stall)
+    version: int = 0  # bumped on re-solve; invalidates stale JOB_FINISH events
+    assignment: Optional[Tuple[Tuple[int, int, int], ...]] = None
+    starvation: float = 0.0  # consecutive solves without a grant
+    first_scheduled: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.finish_time is not None
+
+
+@dataclasses.dataclass
+class ServiceTenant:
+    name: str
+    job_types: Dict[str, JobTypeProfile]
+    weight: float = 1.0
+    joined_at: float = 0.0
+    left_at: Optional[float] = None
+
+    @property
+    def present(self) -> bool:
+        return self.left_at is None
+
+
+class OnlineScheduler:
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        policy: str = "oef-coop",
+        *,
+        devices_per_host: int = 4,
+        min_resolve_interval_s: float = 30.0,
+        contention_penalty: float = 0.92,
+        migration_overhead_s: float = 30.0,
+        audit_every: int = 0,
+        use_weighted_oef: bool = True,
+        fast_noncoop: bool = True,
+        placer_mode: str = "auto",
+    ) -> None:
+        if policy not in SERVICE_POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; choose from {SERVICE_POLICIES}")
+        self.cluster = cluster
+        self.policy = policy
+        self.devices_per_host = devices_per_host
+        self.min_resolve_interval_s = min_resolve_interval_s
+        self.contention_penalty = contention_penalty
+        self.migration_overhead_s = migration_overhead_s
+        self.audit_every = audit_every
+        self.use_weighted_oef = use_weighted_oef and policy.startswith("oef")
+        self.fast_noncoop = fast_noncoop
+        if placer_mode == "auto":
+            self.naive_placement = not policy.startswith("oef")
+        else:
+            self.naive_placement = placer_mode == "naive"
+
+        self.tenants: Dict[str, ServiceTenant] = {}
+        self.jobs: Dict[str, ServiceJob] = {}
+        self.down_hosts: Set[Tuple[int, int]] = set()
+        self.metrics = MetricsCollector()
+        self.last_estimate: Dict[str, float] = {}
+
+        self._placer: Optional[RoundingPlacer] = None
+        self._placer_key: Tuple[str, ...] = ()
+        self._prev_alloc: Optional[Allocation] = None
+        self._prev_assignments: Optional[Dict[str, List[Tuple[int, int, int]]]] = None
+        self._running_jobs: List[ServiceJob] = []  # rate > 0 as of last solve
+        self._dirty = False
+        self._dirty_count = 0
+        self._resolve_pending = False
+        # next time a solve is allowed; the RESOLVE timer is scheduled at
+        # exactly this float so the pop-time comparison is ==, never a
+        # subtraction (last + dt - last < dt can round down and live-lock)
+        self._next_solve_ok = -math.inf
+        self._last_advance = 0.0
+        self._clock = 0.0
+        self._n_solves = 0
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    def run(self, events: Sequence[Event], *, until: Optional[float] = None) -> ServiceReport:
+        queue = EventQueue(events)
+        while True:
+            if not queue:
+                if self._dirty:
+                    # e.g. the last popped event was a stale finish: solve so
+                    # runnable jobs get rates (may push new finish events).
+                    self._resolve(self._clock, queue)
+                    continue
+                break
+            ev = queue.pop()
+            if until is not None and ev.time > until:
+                self._advance(until)
+                self._clock = until
+                break
+            self._advance(ev.time)
+            self._clock = max(self._clock, ev.time)
+            self._handle(ev, queue)
+        unfinished = sum(1 for j in self.jobs.values() if not j.finished)
+        horizon = until if until is not None else self._clock
+        return self.metrics.report(
+            policy=self.policy,
+            horizon_s=horizon,
+            jobs_unfinished=unfinished,
+            steady_state_estimate=dict(self.last_estimate),
+        )
+
+    # ------------------------------------------------------------------
+    # progress accounting (continuous time)
+    # ------------------------------------------------------------------
+    def _advance(self, t: float) -> None:
+        if t <= self._last_advance:
+            return
+        # only jobs granted a rate at the last solve can progress (rates are
+        # only raised inside _resolve, which rebuilds this snapshot)
+        for job in self._running_jobs:
+            if job.finished or job.rate <= 0.0:
+                continue
+            start = max(self._last_advance, job.resume_at)
+            if t <= start:
+                continue
+            gained = job.rate * (t - start)
+            credited = min(job.total_work - job.done, gained)
+            if credited > 0:
+                job.done += credited
+                self.metrics.add_delivered(job.tenant, credited)
+        self._last_advance = t
+
+    # ------------------------------------------------------------------
+    # event handling
+    # ------------------------------------------------------------------
+    def _handle(self, ev: Event, queue: EventQueue) -> None:
+        k = ev.kind
+        if k == EventKind.JOB_FINISH:
+            job = self.jobs.get(ev.job_id)
+            if job is None or job.finished or job.version != ev.payload.get("version"):
+                # stale prediction — but it may have been the same-instant
+                # event that deferred an earlier dirty batch: give the
+                # throttle a chance to fire now
+                self._maybe_resolve(ev.time, queue)
+                return
+            remaining = job.total_work - job.done
+            if remaining > 1e-6 * max(job.total_work, 1.0) + 1e-9:
+                # drift (e.g. migration stall pushed the finish out): re-predict
+                if job.rate > 0:
+                    t_fin = max(ev.time, job.resume_at) + remaining / job.rate
+                    queue.push(Event(t_fin, EventKind.JOB_FINISH, tenant=job.tenant,
+                                     job_id=job.job_id, payload={"version": job.version}))
+                self._maybe_resolve(ev.time, queue)
+                return
+            job.done = job.total_work
+            job.rate = 0.0
+            job.finish_time = ev.time
+            self.metrics.on_event()
+            self.metrics.on_job_finish(job.job_id, job.tenant, job.submit_time, ev.time)
+            self._mark_dirty()
+            self._maybe_resolve(ev.time, queue)
+            return
+
+        self.metrics.on_event()
+        if k == EventKind.RESOLVE:
+            self._resolve_pending = False
+            self._maybe_resolve(ev.time, queue)
+            return
+        if k == EventKind.TENANT_JOIN:
+            jts = {
+                d["name"]: JobTypeProfile(
+                    name=d["name"], speedup=tuple(float(s) for s in d["speedup"]),
+                    min_demand=int(d.get("min_demand", 1)))
+                for d in ev.payload.get("job_types", [])
+            }
+            self.tenants[ev.tenant] = ServiceTenant(
+                name=ev.tenant, job_types=jts,
+                weight=float(ev.payload.get("weight", 1.0)), joined_at=ev.time)
+            self.metrics.on_tenant_join(ev.tenant, ev.time)
+        elif k == EventKind.TENANT_LEAVE:
+            t = self.tenants.get(ev.tenant)
+            if t is not None:
+                t.left_at = ev.time
+                for job in self.jobs.values():
+                    if job.tenant == ev.tenant and not job.finished:
+                        job.rate = 0.0
+                        job.version += 1
+                self.metrics.on_tenant_leave(ev.tenant, ev.time)
+        elif k == EventKind.JOB_SUBMIT:
+            if ev.tenant not in self.tenants:
+                raise ValueError(f"job submit for unknown tenant {ev.tenant!r} at t={ev.time}")
+            jt = ev.payload["job_type"]
+            if jt not in self.tenants[ev.tenant].job_types:
+                raise ValueError(f"unknown job type {jt!r} for tenant {ev.tenant!r}")
+            self.jobs[ev.job_id] = ServiceJob(
+                job_id=ev.job_id, tenant=ev.tenant, job_type=jt,
+                workers=int(ev.payload["workers"]),
+                total_work=float(ev.payload["total_work"]), submit_time=ev.time)
+        elif k == EventKind.HOST_FAIL:
+            pair = (int(ev.payload["type"]), int(ev.payload["host"]))
+            self.down_hosts.add(pair)
+            self._drop_dead_workers(pair)
+        elif k == EventKind.HOST_RECOVER:
+            self.down_hosts.discard((int(ev.payload["type"]), int(ev.payload["host"])))
+        elif k == EventKind.PROFILE_UPDATE:
+            t = self.tenants.get(ev.tenant)
+            if t is not None:
+                jt = ev.payload["job_type"]
+                t.job_types[jt] = JobTypeProfile(
+                    name=jt, speedup=tuple(float(s) for s in ev.payload["speedup"]),
+                    min_demand=t.job_types[jt].min_demand if jt in t.job_types else 1)
+        else:
+            raise ValueError(f"unhandled event kind: {k}")
+        self._mark_dirty()
+        self._maybe_resolve(ev.time, queue)
+
+    def _drop_dead_workers(self, pair: Tuple[int, int]) -> None:
+        """A host died: immediately stop crediting workers placed on it
+        (straggler model on the survivors) until the next re-solve."""
+        for job in self.jobs.values():
+            if job.finished or not job.assignment or job.rate <= 0:
+                continue
+            live = [(j, h, c) for (j, h, c) in job.assignment if (j, h) not in self.down_hosts]
+            if len(live) == len(job.assignment):
+                continue
+            job.version += 1  # old finish prediction is now wrong
+            if not live:
+                job.rate = 0.0
+                continue
+            w = self.tenants[job.tenant].job_types[job.job_type].speedup_vec()
+            job.rate = self._job_rate(live, w)
+
+    def _job_rate(self, assignment: Sequence[Tuple[int, int, int]], w: Array) -> float:
+        types_used = sorted({j for j, _, _ in assignment})
+        hosts_used = {(j, h) for j, h, _ in assignment}
+        n_workers = sum(c for _, _, c in assignment)
+        rate = n_workers * float(w[types_used[0]])  # slowest type paces sync SGD
+        if len(hosts_used) > 1:
+            rate *= self.contention_penalty
+        return rate
+
+    # ------------------------------------------------------------------
+    # re-solve throttle + dirty batching
+    # ------------------------------------------------------------------
+    def _mark_dirty(self) -> None:
+        self._dirty = True
+        self._dirty_count += 1
+
+    def _maybe_resolve(self, now: float, queue: EventQueue) -> None:
+        if not self._dirty:
+            return
+        nxt = queue.peek_time()
+        if nxt is not None and nxt <= now:
+            return  # more events at this instant: batch them into one solve
+        if now >= self._next_solve_ok:
+            self._resolve(now, queue)
+        elif not self._resolve_pending:
+            self._resolve_pending = True
+            queue.push(Event(self._next_solve_ok, EventKind.RESOLVE))
+
+    # ------------------------------------------------------------------
+    # the decision: fair-share solve -> rounding -> packing -> rates
+    # ------------------------------------------------------------------
+    def _effective_capacity(self) -> Array:
+        m_eff = self.cluster.m_vec.copy()
+        for (j, h) in self.down_hosts:
+            host_size = min(self.devices_per_host,
+                            max(0, int(self.cluster.m[j]) - h * self.devices_per_host))
+            m_eff[j] = max(0.0, m_eff[j] - host_size)
+        return m_eff
+
+    def _active_tenants(self, now: float) -> List[ServiceTenant]:
+        has_work: Set[str] = set()
+        for job in self.jobs.values():
+            if not job.finished and job.submit_time <= now:
+                has_work.add(job.tenant)
+        return [t for t in self.tenants.values() if t.present and t.name in has_work]
+
+    def _solve_allocation(self, active: List[ServiceTenant], m_eff: Array):
+        W = np.stack([
+            np.stack([jt.speedup_vec() for jt in t.job_types.values()]).mean(axis=0)
+            for t in active
+        ])
+        weighted = self.use_weighted_oef and any(
+            len(t.job_types) > 1 or t.weight != 1.0 for t in active)
+        if weighted:
+            ten = [Tenant(name=t.name, job_types=tuple(t.job_types.values()), weight=t.weight)
+                   for t in active]
+            mode = "cooperative" if self.policy == "oef-coop" else "noncooperative"
+            ta = oef.evaluate_tenants(
+                ten, ClusterSpec(self.cluster.types, tuple(int(x) for x in m_eff)),
+                mode=mode, prev=self._prev_alloc,
+                fast=self.fast_noncoop and mode == "noncooperative")
+            self._prev_alloc = ta.row_alloc
+            ideal = ta.X
+            est = np.einsum("lk,lk->l", W, ta.X)
+            reused = bool(ta.row_alloc.meta.get("reused", False))
+        else:
+            if self.policy in OEF_POLICIES:
+                alloc = oef.solve_incremental(
+                    W, m_eff, policy=self.policy, prev=self._prev_alloc,
+                    fast=self.fast_noncoop)
+            else:
+                alloc = baselines.solve_incremental(
+                    W, m_eff, policy=self.policy, prev=self._prev_alloc)
+            self._prev_alloc = alloc
+            ideal, est = alloc.X, alloc.throughput
+            reused = bool(alloc.meta.get("reused", False))
+        return ideal, est, W, reused
+
+    def _resolve(self, now: float, queue: EventQueue) -> None:
+        dirty_batch = self._dirty_count
+        self._dirty = False
+        self._dirty_count = 0
+        self._next_solve_ok = now + self.min_resolve_interval_s
+        active = self._active_tenants(now)
+        if not active:
+            self.last_estimate = {}
+            for job in self.jobs.values():
+                if not job.finished:
+                    job.rate = 0.0
+                    job.version += 1
+            self._running_jobs = []
+            return
+        m_eff = self._effective_capacity()
+
+        t0 = _time.perf_counter()
+        ideal, est, W, reused = self._solve_allocation(active, m_eff)
+        solver_s = _time.perf_counter() - t0
+
+        key = tuple(t.name for t in active)
+        if self._placer is None or self._placer_key != key:
+            self._placer = RoundingPlacer(len(active), self.cluster.m, self.devices_per_host)
+            self._placer_key = key
+        min_dem = np.array([min(jt.min_demand for jt in t.job_types.values()) for t in active])
+        real = self._placer.round_shares(ideal, min_dem)
+
+        reqs: List[JobRequest] = []
+        tenant_jobs: Dict[str, List[ServiceJob]] = {}
+        for job in self.jobs.values():
+            if not job.finished and job.submit_time <= now:
+                tenant_jobs.setdefault(job.tenant, []).append(job)
+        for ui, t in enumerate(active):
+            budget = int(real[ui].sum())
+            for job in sorted(tenant_jobs.get(t.name, []),
+                              key=lambda j: (-j.starvation, j.job_id)):
+                if budget < job.workers:
+                    job.starvation += 1
+                    continue
+                budget -= job.workers
+                reqs.append(JobRequest(user=ui, job_id=job.job_id, workers=job.workers,
+                                       starvation=job.starvation))
+        placement = self._placer.place(real, reqs, naive=self.naive_placement,
+                                       prev=self._prev_assignments,
+                                       down_hosts=self.down_hosts)
+        self._prev_assignments = placement.assignments
+
+        # -- convert placements into continuous rates + predicted finishes --
+        placed_ids = set(placement.assignments)
+        req_ids = {r.job_id for r in reqs}
+        for ui, t in enumerate(active):
+            for job in tenant_jobs.get(t.name, []):
+                if job.job_id not in placed_ids:
+                    if job.job_id in req_ids:
+                        # requested but rejected by the packer (fragmentation,
+                        # failed hosts): age it like the budget-skipped jobs
+                        # so its priority rises (matches the round simulator)
+                        job.starvation += 1
+                    if job.rate > 0 or job.assignment is not None:
+                        job.version += 1  # invalidate stale finish predictions
+                    job.rate = 0.0
+                    continue
+                assignment = tuple(sorted(placement.assignments[job.job_id]))
+                w = t.job_types[job.job_type].speedup_vec()
+                migrated = job.assignment is not None and job.assignment != assignment
+                job.version += 1
+                job.assignment = assignment
+                job.rate = self._job_rate(assignment, w)
+                # never refund an in-progress migration stall: a re-solve that
+                # keeps the assignment must not pull resume_at back to `now`
+                job.resume_at = max(job.resume_at,
+                                    now + (self.migration_overhead_s if migrated else 0.0))
+                job.starvation = 0.0
+                if job.first_scheduled is None:
+                    job.first_scheduled = now
+                    self.metrics.on_first_scheduled(job.job_id, job.submit_time, now)
+                if job.rate > 0:
+                    t_fin = job.resume_at + (job.total_work - job.done) / job.rate
+                    queue.push(Event(t_fin, EventKind.JOB_FINISH, tenant=job.tenant,
+                                     job_id=job.job_id, payload={"version": job.version}))
+
+        self._running_jobs = [j for j in self.jobs.values()
+                              if not j.finished and j.rate > 0]
+        self._n_solves += 1
+        self.last_estimate = {t.name: float(e) for t, e in zip(active, est)}
+        self.metrics.on_solve(SolveRecord(
+            time=now, n_tenants=len(active), latency_s=solver_s, reused=reused,
+            dirty_events=dirty_batch, policy=self.policy))
+        if self.audit_every > 0 and self._n_solves % self.audit_every == 0:
+            self.metrics.on_audit(now, properties.property_report(W, ideal, m_eff))
+
+
+# ---------------------------------------------------------------------------
+# Cross-validation harness: online service vs. round simulator
+# ---------------------------------------------------------------------------
+
+
+def crossval_static(
+    tenants: Sequence[SimTenant],
+    cluster: ClusterSpec,
+    policy: str = "oef-coop",
+    *,
+    rounds: int = 5,
+    round_len_s: float = 300.0,
+    **sched_kw,
+) -> Dict[str, object]:
+    """Run both engines on the same static workload; compare steady state.
+
+    The workload must be static over the horizon (every tenant active with
+    unfinished jobs throughout). Returns the per-tenant steady-state
+    normalized-throughput estimates of each engine plus the max relative
+    error — the acceptance check asserts < 1%.
+    """
+    from ..core.simulator import ClusterSimulator
+    from .traces import static_trace_from_sim_tenants
+
+    sim = ClusterSimulator(cluster, copy.deepcopy(list(tenants)), policy=policy,
+                           round_len_s=round_len_s)
+    simres = sim.run(max_rounds=rounds)
+    if not simres.records:
+        raise ValueError("simulator produced no rounds — workload not static?")
+    sim_est = simres.records[-1].tenant_efficiency
+
+    trace = static_trace_from_sim_tenants(tenants, round_len_s=round_len_s)
+    sched = OnlineScheduler(cluster, policy, **sched_kw)
+    sched.run(trace, until=rounds * round_len_s)
+    svc_est = sched.last_estimate
+
+    common = sorted(set(sim_est) & set(svc_est))
+    if not common or set(sim_est) != set(svc_est):
+        raise ValueError(f"tenant sets diverged: sim={sorted(sim_est)} svc={sorted(svc_est)}")
+    max_rel = max(abs(svc_est[t] - sim_est[t]) / max(abs(sim_est[t]), 1e-12) for t in common)
+    return {"simulator": sim_est, "service": svc_est, "max_rel_err": float(max_rel)}
