@@ -5,6 +5,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== static analysis (repro.analysis) =="
+python -m repro.analysis src --baseline analysis_baseline.txt
+
 echo "== tier-1 pytest =="
 python -m pytest -x -q "$@"
 

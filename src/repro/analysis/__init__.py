@@ -1,0 +1,45 @@
+"""Repo-native static analysis: determinism, JAX/Pallas safety, contracts.
+
+Run as ``python -m repro.analysis [paths...]``. See ``docs/analysis.md`` for
+the rule catalog and suppression mechanics.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    analyze_file,
+    analyze_paths,
+    iter_python_files,
+    load_baseline,
+    new_findings,
+    write_baseline,
+)
+
+
+def all_rules() -> List[Rule]:
+    """Every registered rule, stable-ordered by rule id."""
+    from . import rules_contracts, rules_determinism, rules_jax
+
+    rules: List[Rule] = []
+    for mod in (rules_determinism, rules_jax, rules_contracts):
+        rules.extend(mod.rules())
+    rules.sort(key=lambda r: r.rule_id)
+    return rules
+
+
+__all__ = [
+    "Finding",
+    "ModuleContext",
+    "Rule",
+    "all_rules",
+    "analyze_file",
+    "analyze_paths",
+    "iter_python_files",
+    "load_baseline",
+    "new_findings",
+    "write_baseline",
+]

@@ -1,0 +1,89 @@
+"""CLI for ``python -m repro.analysis``.
+
+Exit codes: 0 clean (no new findings), 1 new findings, 2 usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from . import all_rules, analyze_paths, load_baseline, new_findings, write_baseline
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=(
+            "Repo-native static analysis: determinism (D1xx), JAX/Pallas "
+            "tracer safety (J2xx), solver contracts (C3xx)."
+        ),
+    )
+    p.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files or directories to analyze (default: src)",
+    )
+    p.add_argument(
+        "--baseline", metavar="FILE", default=None,
+        help="baseline file of accepted findings (path<TAB>rule<TAB>count)",
+    )
+    p.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current findings to --baseline (or analysis_baseline.txt) and exit 0",
+    )
+    p.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit",
+    )
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.rule_id}  {rule.title}")
+            print(f"      scope: {', '.join(rule.scope)}")
+            print(f"      {rule.rationale}")
+        return 0
+
+    try:
+        findings = analyze_paths(args.paths)
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        target = args.baseline or "analysis_baseline.txt"
+        write_baseline(target, findings)
+        print(f"wrote {len(findings)} finding(s) to {target}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else {}
+    try:
+        fresh = new_findings(findings, baseline)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    for fi in fresh:
+        print(fi.format())
+    suppressed = len(findings) - len(fresh)
+    if fresh:
+        print(
+            f"\n{len(fresh)} new finding(s)"
+            + (f" ({suppressed} baselined)" if suppressed else ""),
+            file=sys.stderr,
+        )
+        return 1
+    if suppressed:
+        print(f"clean ({suppressed} baselined finding(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # e.g. `... | head` closed the pipe
+        sys.exit(0)

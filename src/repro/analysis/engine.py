@@ -1,0 +1,307 @@
+"""Engine for the repo-native static-analysis pass (``python -m repro.analysis``).
+
+The analyzer encodes invariants that this reproduction's three
+correctness-critical layers rely on but that nothing else enforces:
+
+  - **D-rules** (determinism): the online service's bit-exact trace replay
+    breaks silently on hash-order iteration, float time equality, unseeded
+    RNGs, or wall-clock reads inside the control plane;
+  - **J-rules** (JAX/Pallas tracer safety): a stray host sync or Python
+    branch on a traced value silently de-optimizes the jit/Pallas hot path;
+  - **C-rules** (solver contracts): solvers must stay routable through the
+    fairness audits in ``core/properties.py``, and library validation must
+    survive ``python -O``.
+
+This module is rule-agnostic plumbing: file discovery, parsing, per-module
+context (import aliases, noqa comments), scope matching, the baseline
+ratchet, and finding aggregation. Rules live in ``rules_determinism``,
+``rules_jax`` and ``rules_contracts``.
+
+Suppression:
+  - inline: ``# repro: noqa[D101]`` (comma-separated ids) or bare
+    ``# repro: noqa`` on the flagged line;
+  - checked-in baseline: ``path<TAB>rule<TAB>count`` lines; a finding group
+    is "new" only when its count exceeds the baselined count (a ratchet —
+    robust to line drift, still blocks regressions).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa(?:\[(?P<rules>[A-Za-z0-9_,\s]+)\])?", re.IGNORECASE
+)
+
+# Aliases assumed even when a module plays import tricks; real imports
+# collected per-module override/extend these.
+DEFAULT_ALIASES = {
+    "np": "numpy",
+    "jnp": "jax.numpy",
+    "pl": "jax.experimental.pallas",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str  # as reported (posix separators, relative to cwd when possible)
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    @property
+    def group(self) -> Tuple[str, str]:
+        return (self.path, self.rule)
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything a rule needs about one parsed module."""
+
+    path: str  # reported path (posix)
+    tree: ast.Module
+    lines: List[str]
+    aliases: Dict[str, str]  # local alias -> dotted module/object path
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        return Finding(
+            path=self.path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0) + 1,
+            rule=rule,
+            message=message,
+        )
+
+
+class Rule:
+    """Base class: one rule id, a path scope, and a ``check`` pass.
+
+    ``scope`` is a tuple of path fragments (posix). The rule runs on a file
+    when any fragment occurs in its path. Files outside a ``repro``
+    package tree (fixtures, ad-hoc snippets) get every rule — that is what
+    the violation-fixture tests rely on.
+    """
+
+    rule_id: str = ""
+    title: str = ""
+    rationale: str = ""
+    scope: Tuple[str, ...] = ("repro/",)
+
+    def applies(self, path: str) -> bool:
+        p = path.replace(os.sep, "/")
+        if "repro/" not in p:
+            return True
+        return any(frag in p for frag in self.scope)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers (used by every rule module)
+# ---------------------------------------------------------------------------
+
+
+def collect_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Map local names to dotted origins from import statements."""
+    aliases = dict(DEFAULT_ALIASES)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for nested Attribute/Name chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def resolved_name(ctx: ModuleContext, node: ast.AST) -> Optional[str]:
+    """Dotted name with the leading segment expanded through import aliases."""
+    d = dotted_name(node)
+    if not d:
+        return None
+    head, _, rest = d.partition(".")
+    full = ctx.aliases.get(head, head)
+    return f"{full}.{rest}" if rest else full
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """Last identifier of a Name/Attribute ('self.finish_time' -> 'finish_time')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# File discovery and per-file analysis
+# ---------------------------------------------------------------------------
+
+
+def iter_python_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                files.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(
+                    d for d in dirs
+                    if d not in ("__pycache__", ".git", ".pytest_cache", "node_modules")
+                )
+                for name in sorted(names):
+                    if name.endswith(".py"):
+                        files.append(os.path.join(root, name))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+    return files
+
+
+def _report_path(path: str) -> str:
+    try:
+        rel = os.path.relpath(path)
+    except ValueError:  # different drive (windows) — keep absolute
+        rel = path
+    if not rel.startswith(".."):
+        path = rel
+    return path.replace(os.sep, "/")
+
+
+def noqa_rules_for_line(lines: List[str], lineno: int) -> Optional[frozenset]:
+    """Rules suppressed on a physical line.
+
+    Returns None when there is no noqa comment; an empty frozenset means a
+    bare ``# repro: noqa`` (suppress every rule).
+    """
+    if not (1 <= lineno <= len(lines)):
+        return None
+    m = NOQA_RE.search(lines[lineno - 1])
+    if not m:
+        return None
+    if m.group("rules") is None:
+        return frozenset()
+    return frozenset(r.strip().upper() for r in m.group("rules").split(",") if r.strip())
+
+
+def analyze_file(path: str, rules: Sequence[Rule]) -> List[Finding]:
+    """Run every applicable rule on one file; returns noqa-filtered findings."""
+    report_path = _report_path(path)
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [
+            Finding(report_path, e.lineno or 1, (e.offset or 0) + 1, "E001",
+                    f"syntax error: {e.msg}")
+        ]
+    lines = source.splitlines()
+    ctx = ModuleContext(
+        path=report_path, tree=tree, lines=lines, aliases=collect_aliases(tree)
+    )
+    findings: List[Finding] = []
+    for rule in rules:
+        if not rule.applies(report_path):
+            continue
+        findings.extend(rule.check(ctx))
+    kept: List[Finding] = []
+    for fi in findings:
+        suppressed = noqa_rules_for_line(lines, fi.line)
+        if suppressed is not None and (not suppressed or fi.rule.upper() in suppressed):
+            continue
+        kept.append(fi)
+    kept.sort(key=lambda fi: (fi.path, fi.line, fi.col, fi.rule))
+    return kept
+
+
+def analyze_paths(paths: Sequence[str], rules: Optional[Sequence[Rule]] = None
+                  ) -> List[Finding]:
+    if rules is None:
+        from . import all_rules
+
+        rules = all_rules()
+    findings: List[Finding] = []
+    for path in iter_python_files(paths):
+        findings.extend(analyze_file(path, rules))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Baseline ratchet
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: str) -> Dict[Tuple[str, str], int]:
+    """Parse ``path<TAB>rule<TAB>count`` lines; '#' starts a comment."""
+    counts: Dict[Tuple[str, str], int] = {}
+    if not os.path.exists(path):
+        return counts
+    with open(path, "r", encoding="utf-8") as f:
+        for raw in f:
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split("\t") if "\t" in line else line.split()
+            if len(parts) != 3:
+                raise ValueError(f"malformed baseline line: {raw!r}")
+            fpath, rule, count = parts
+            counts[(fpath, rule)] = counts.get((fpath, rule), 0) + int(count)
+    return counts
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    groups: Dict[Tuple[str, str], int] = {}
+    for fi in findings:
+        groups[fi.group] = groups.get(fi.group, 0) + 1
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("# repro.analysis baseline — accepted pre-existing findings.\n")
+        f.write("# Regenerate: python -m repro.analysis src --write-baseline\n")
+        f.write("# Format: path<TAB>rule<TAB>count (a ratchet: new findings in a\n")
+        f.write("# (path, rule) group beyond the recorded count fail the check).\n")
+        for (fpath, rule), count in sorted(groups.items()):
+            f.write(f"{fpath}\t{rule}\t{count}\n")
+
+
+def new_findings(findings: Sequence[Finding],
+                 baseline: Dict[Tuple[str, str], int]) -> List[Finding]:
+    """Findings beyond the baselined count per (path, rule) group.
+
+    Within a group, the first ``baseline[group]`` findings (in line order)
+    are treated as the accepted ones; the rest are new. Line-level precision
+    is intentionally not attempted — the ratchet only promises "no more than
+    N findings of rule R in file F".
+    """
+    remaining = dict(baseline)
+    fresh: List[Finding] = []
+    for fi in sorted(findings, key=lambda fi: (fi.path, fi.rule, fi.line, fi.col)):
+        if remaining.get(fi.group, 0) > 0:
+            remaining[fi.group] -= 1
+        else:
+            fresh.append(fi)
+    fresh.sort(key=lambda fi: (fi.path, fi.line, fi.col, fi.rule))
+    return fresh

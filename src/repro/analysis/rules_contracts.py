@@ -1,0 +1,152 @@
+"""C-rules: solver contracts and library hygiene.
+
+The paper's claims hinge on solver outputs satisfying fairness properties
+(sharing incentive, Pareto efficiency, envy bounds) that are only checked
+by the audits in ``core/properties.py``. C301 makes that route structural:
+any module-level ``solve*`` entry point in ``core/`` that returns an
+``Allocation`` must carry the ``@audited_solver`` decorator so callers can
+request a property audit uniformly. C302/C303 are classic library hygiene:
+mutable defaults alias across calls, and ``assert`` disappears under
+``python -O`` so it cannot carry input validation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .engine import Finding, ModuleContext, Rule, terminal_name
+
+_AUDIT_DECORATOR = "audited_solver"
+_ALLOCATION_TYPES = {"Allocation"}
+
+
+def _returns_allocation(fn: ast.FunctionDef) -> bool:
+    """True when the function's return annotation or returned constructor is
+    an ``Allocation`` (subtypes like ``ElasticAllocation`` are exempt — they
+    carry their own audit surface)."""
+    ann = fn.returns
+    if ann is not None:
+        name = terminal_name(ann)
+        if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+            name = ann.value.split("[")[0].strip()
+        if name in _ALLOCATION_TYPES:
+            return True
+        if name is not None:
+            return False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Call):
+            if terminal_name(node.value.func) in _ALLOCATION_TYPES:
+                return True
+    return False
+
+
+def _has_audit_decorator(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if terminal_name(target) == _AUDIT_DECORATOR:
+            return True
+    return False
+
+
+class UnauditedSolver(Rule):
+    rule_id = "C301"
+    title = "solver entry point without a route through the property audits"
+    rationale = (
+        "Fairness guarantees (sharing incentive, Pareto efficiency) are only "
+        "verified by core/properties.py; a solve* entry point returning an "
+        "Allocation without @audited_solver cannot be audited uniformly by "
+        "callers or the sweep harness."
+    )
+    scope = ("repro/core/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ctx.tree.body:  # module-level entry points only
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if not node.name.startswith("solve") or node.name.startswith("_"):
+                continue
+            if not _returns_allocation(node):
+                continue
+            if not _has_audit_decorator(node):
+                findings.append(ctx.finding(
+                    node, self.rule_id,
+                    f"solver {node.name!r} returns an Allocation without "
+                    f"@audited_solver; decorate it so property audits stay "
+                    f"reachable",
+                ))
+        return findings
+
+
+_MUTABLE_DEFAULT = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp)
+_MUTABLE_CTORS = {"list", "dict", "set", "bytearray", "defaultdict", "deque",
+                  "Counter", "OrderedDict"}
+
+
+class MutableDefaultArg(Rule):
+    rule_id = "C302"
+    title = "mutable default argument"
+    rationale = (
+        "A mutable default is created once at def time and aliased across "
+        "every call; mutation leaks between callers. Default to None and "
+        "construct inside the body."
+    )
+    scope = ("repro/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = node.args
+            named = list(args.posonlyargs) + list(args.args)
+            defaults = list(args.defaults)
+            pairs = list(zip(named[len(named) - len(defaults):], defaults))
+            pairs += [
+                (a, d) for a, d in zip(args.kwonlyargs, args.kw_defaults)
+                if d is not None
+            ]
+            for arg, default in pairs:
+                if self._is_mutable(default):
+                    findings.append(ctx.finding(
+                        default, self.rule_id,
+                        f"mutable default for parameter {arg.arg!r} in "
+                        f"{node.name!r}; use None and construct in the body",
+                    ))
+        return findings
+
+    @staticmethod
+    def _is_mutable(node: ast.AST) -> bool:
+        if isinstance(node, _MUTABLE_DEFAULT):
+            return True
+        if isinstance(node, ast.Call):
+            name = terminal_name(node.func)
+            return name in _MUTABLE_CTORS
+        return False
+
+
+class BareAssert(Rule):
+    rule_id = "C303"
+    title = "bare assert used for input validation in library code"
+    rationale = (
+        "assert statements vanish under `python -O`, so they cannot guard "
+        "inputs in library code. Raise ValueError (bad caller input) or "
+        "RuntimeError (broken internal state) with an actionable message."
+    )
+    scope = ("repro/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assert):
+                findings.append(ctx.finding(
+                    node, self.rule_id,
+                    "bare assert is stripped under python -O; raise "
+                    "ValueError/RuntimeError with an actionable message",
+                ))
+        return findings
+
+
+def rules() -> List[Rule]:
+    return [UnauditedSolver(), MutableDefaultArg(), BareAssert()]

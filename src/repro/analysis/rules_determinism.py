@@ -1,0 +1,263 @@
+"""D-rules: determinism invariants for the online service and simulator.
+
+The service's trace replay is bit-exact by contract (tests/test_service.py):
+the schedule must be a pure function of the input trace. Anything that lets
+process-level entropy leak into a scheduling decision — hash-order set
+iteration, float equality on event times, unseeded RNGs, wall-clock reads —
+breaks that contract silently, often only under a different PYTHONHASHSEED
+or machine.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Set, Tuple
+
+from .engine import (
+    Finding,
+    ModuleContext,
+    Rule,
+    resolved_name,
+    terminal_name,
+)
+
+_SET_CTORS = ("set", "frozenset", "builtins.set", "builtins.frozenset")
+_SET_ANNOT_RE = re.compile(r"\b(?:typing\.)?(?:Set|FrozenSet|MutableSet)\[|^\s*(?:set|frozenset)\s*$")
+
+
+def _is_set_display(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in _SET_CTORS:
+            return True
+    return False
+
+
+def _collect_set_symbols(tree: ast.Module) -> Tuple[Set[str], Set[str]]:
+    """Names / ``self.<attr>`` attributes bound to sets anywhere in the module.
+
+    Conservative union over assignments and ``Set[...]`` annotations; a name
+    rebound to a non-set later stays tracked (rare, and sorted() wrapping at
+    the iteration site silences the rule anyway).
+    """
+    names: Set[str] = set()
+    attrs: Set[str] = set()
+
+    def record(target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            names.add(target.id)
+        elif (isinstance(target, ast.Attribute)
+              and isinstance(target.value, ast.Name)
+              and target.value.id == "self"):
+            attrs.add(target.attr)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and _is_set_display(node.value):
+            for t in node.targets:
+                record(t)
+        elif isinstance(node, ast.AnnAssign):
+            try:
+                annot = ast.unparse(node.annotation)
+            except Exception:  # pragma: no cover - unparse is total on 3.9+
+                continue
+            if _SET_ANNOT_RE.search(annot) or (
+                node.value is not None and _is_set_display(node.value)
+            ):
+                record(node.target)
+    return names, attrs
+
+
+class UnorderedSetIteration(Rule):
+    rule_id = "D101"
+    title = "iteration over an unordered set in scheduling code"
+    rationale = (
+        "Set iteration order follows the process hash seed; when it feeds a "
+        "scheduling or placement decision, two replays of the same trace can "
+        "diverge. Iterate sorted(<set>) instead."
+    )
+    scope = ("repro/service/", "repro/core/")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        names, attrs = _collect_set_symbols(ctx.tree)
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.For):
+                iters = [node.iter]
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters = [g.iter for g in node.generators]
+            else:
+                continue
+            for it in iters:
+                label = self._set_iterable(it, names, attrs)
+                if label is not None:
+                    findings.append(ctx.finding(
+                        it, self.rule_id,
+                        f"iteration over unordered set {label!r}; wrap in "
+                        f"sorted(...) so replay does not depend on the hash seed",
+                    ))
+        return findings
+
+    @staticmethod
+    def _set_iterable(node: ast.AST, names: Set[str], attrs: Set[str]):
+        if _is_set_display(node):
+            if isinstance(node, ast.Call):
+                return f"{terminal_name(node.func)}(...)"
+            return "{...}"
+        if isinstance(node, ast.Name) and node.id in names:
+            return node.id
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in attrs):
+            return f"self.{node.attr}"
+        return None
+
+
+_TIMEY_RE = re.compile(
+    r"(^|_)(time|clock|deadline|timestamp)($|_)|_(at|ts)$"
+)
+
+
+class FloatTimeEquality(Rule):
+    rule_id = "D102"
+    title = "== / != comparison on floating-point event times"
+    rationale = (
+        "Event times are continuous floats; exact equality silently turns "
+        "into 'never' after any arithmetic (t + dt - dt != t). Compare with "
+        "an ordering (<=, >=) or schedule the exact float and compare "
+        "identity-free via the event queue."
+    )
+    scope = ("repro/service/", "repro/core/simulator.py")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            operands = [node.left] + list(node.comparators)
+            for i, op in enumerate(node.ops):
+                if not isinstance(op, (ast.Eq, ast.NotEq)):
+                    continue
+                left, right = operands[i], operands[i + 1]
+                for side, other in ((left, right), (right, left)):
+                    name = terminal_name(side)
+                    if name is None or not _TIMEY_RE.search(name):
+                        continue
+                    if isinstance(other, ast.Constant) and isinstance(
+                        other.value, (str, bytes, bool, type(None))
+                    ):
+                        break  # sentinel/string compare, not a time compare
+                    findings.append(ctx.finding(
+                        node, self.rule_id,
+                        f"float equality on event time {name!r}; use an "
+                        f"ordering comparison or an epsilon",
+                    ))
+                    break
+        return findings
+
+
+_NUMPY_SEEDED_OK = {
+    "default_rng", "Generator", "SeedSequence", "PCG64", "PCG64DXSM",
+    "Philox", "MT19937", "SFC64", "BitGenerator",
+}
+_STDLIB_RANDOM_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "normalvariate", "gauss", "betavariate",
+    "expovariate", "triangular", "vonmisesvariate", "paretovariate",
+    "weibullvariate", "getrandbits", "randbytes",
+}
+
+
+class UnseededRNG(Rule):
+    rule_id = "D103"
+    title = "unseeded or global-state RNG construction"
+    rationale = (
+        "The legacy numpy global RNG and the stdlib random module share "
+        "process-global state, and default_rng() without a seed draws OS "
+        "entropy — either way the run is not a function of its inputs. Use "
+        "np.random.default_rng(seed) / random.Random(seed)."
+    )
+    scope = ("repro/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            full = resolved_name(ctx, node.func)
+            if not full:
+                continue
+            if full.startswith("numpy.random."):
+                leaf = full.rsplit(".", 1)[1]
+                if leaf == "default_rng":
+                    if not node.args and not node.keywords:
+                        findings.append(ctx.finding(
+                            node, self.rule_id,
+                            "np.random.default_rng() without a seed is "
+                            "entropy-seeded; pass an explicit seed",
+                        ))
+                elif leaf not in _NUMPY_SEEDED_OK:
+                    findings.append(ctx.finding(
+                        node, self.rule_id,
+                        f"legacy global numpy RNG np.random.{leaf}(); use a "
+                        f"seeded np.random.default_rng(seed) Generator",
+                    ))
+            elif full == "random.Random" and not node.args and not node.keywords:
+                findings.append(ctx.finding(
+                    node, self.rule_id,
+                    "random.Random() without a seed; pass an explicit seed",
+                ))
+            elif (full.startswith("random.")
+                  and full.rsplit(".", 1)[1] in _STDLIB_RANDOM_FNS):
+                findings.append(ctx.finding(
+                    node, self.rule_id,
+                    f"stdlib global RNG {full}(); use a seeded "
+                    f"random.Random(seed) instance",
+                ))
+        return findings
+
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.localtime", "time.ctime", "time.gmtime",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+
+class WallClockInControlPlane(Rule):
+    rule_id = "D104"
+    title = "wall-clock read inside the scheduling control plane"
+    rationale = (
+        "The service and simulator run in virtual (event/round) time; a "
+        "wall-clock read that leaks into state or decisions makes replay "
+        "machine-dependent. Telemetry-only timing must be excluded from "
+        "determinism comparisons and marked '# repro: noqa[D104]'."
+    )
+    scope = ("repro/service/", "repro/core/simulator.py")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                full = resolved_name(ctx, node.func)
+                if full in _WALL_CLOCK:
+                    findings.append(ctx.finding(
+                        node, self.rule_id,
+                        f"wall-clock call {full}() in control-plane code; use "
+                        f"event time, or mark telemetry with noqa[D104]",
+                    ))
+        return findings
+
+
+def rules() -> List[Rule]:
+    return [
+        UnorderedSetIteration(),
+        FloatTimeEquality(),
+        UnseededRNG(),
+        WallClockInControlPlane(),
+    ]

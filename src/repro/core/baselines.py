@@ -28,11 +28,13 @@ import numpy as np
 
 from .lp import LPError, solve_lp
 from .oef import _capacity_constraints, _solve, allocation_reusable, mark_reused
+from .properties import audited_solver
 from .types import Allocation
 
 Array = np.ndarray
 
 
+@audited_solver
 def solve_maxmin(W: Array, m: Array) -> Allocation:
     """Max-min fairness for interchangeable devices: equal split per type."""
     W = np.asarray(W, dtype=np.float64)
@@ -43,6 +45,7 @@ def solve_maxmin(W: Array, m: Array) -> Allocation:
                       meta={"policy": "max-min"})
 
 
+@audited_solver
 def solve_gavel(W: Array, m: Array, *, method: str = "highs") -> Allocation:
     """Gavel's max-min-over-fair-share policy (as portrayed in the paper).
 
@@ -88,6 +91,7 @@ def solve_gavel(W: Array, m: Array, *, method: str = "highs") -> Allocation:
                       meta={"policy": "gavel", "t_star": t_star})
 
 
+@audited_solver
 def solve_gandiva_fair(W: Array, m: Array) -> Allocation:
     """Gandiva_fair: equal split + greedy second-price pairwise trading."""
     W = np.asarray(W, dtype=np.float64)
@@ -161,6 +165,7 @@ ALL_POLICIES = {
 }
 
 
+@audited_solver
 def solve_incremental(
     W: Array,
     m: Array,

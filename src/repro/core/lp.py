@@ -56,8 +56,17 @@ def solve_lp(
     *,
     method: str = "highs",
 ) -> LPResult:
-    """Maximize ``c @ x`` subject to the given constraints and ``x >= 0``."""
+    """Maximize ``c @ x`` subject to the given constraints and ``x >= 0``.
+
+    Raises ``ValueError`` on malformed inputs (mismatched shapes, a matrix
+    without its right-hand side) — explicit raises rather than asserts so the
+    checks survive ``python -O`` on the evaluator hot path.
+    """
     c = np.asarray(c, dtype=np.float64)
+    if c.ndim != 1:
+        raise ValueError(f"objective c must be 1-D, got shape {c.shape}")
+    _validate_constraint_block("A_ub/b_ub", A_ub, b_ub, c.shape[0])
+    _validate_constraint_block("A_eq/b_eq", A_eq, b_eq, c.shape[0])
     if method == "highs":
         if not _HAVE_SCIPY:  # pragma: no cover
             method = "simplex"
@@ -81,6 +90,25 @@ def solve_lp(
     if method == "simplex":
         return _two_phase_simplex(c, A_ub, b_ub, A_eq, b_eq)
     raise ValueError(f"unknown LP method: {method}")
+
+
+def _validate_constraint_block(name: str, A: Optional[Array], b: Optional[Array],
+                               n_vars: int) -> None:
+    if (A is None) != (b is None):
+        raise ValueError(f"{name}: constraint matrix and rhs must be given together")
+    if A is None:
+        return
+    A2 = np.atleast_2d(np.asarray(A, dtype=np.float64))
+    b1 = np.asarray(b, dtype=np.float64).ravel()
+    if A2.size and A2.shape[1] != n_vars:
+        raise ValueError(
+            f"{name}: matrix has {A2.shape[1]} columns but the objective has "
+            f"{n_vars} variables"
+        )
+    if A2.shape[0] != b1.shape[0] and A2.size:
+        raise ValueError(
+            f"{name}: {A2.shape[0]} constraint rows but {b1.shape[0]} rhs entries"
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .lp import LPError, LPResult, solve_lp
+from .properties import audited_solver
 from .types import Allocation, ClusterSpec, JobTypeProfile, Tenant, validate_speedup_matrix
 
 Array = np.ndarray
@@ -34,6 +35,7 @@ Array = np.ndarray
 # ---------------------------------------------------------------------------
 
 
+@audited_solver
 def solve_efficiency_only(W: Array, m: Array, *, method: str = "highs") -> Allocation:
     """Eq. (4): pure throughput maximization — intentionally unfair (§3.1.1)."""
     W = np.asarray(W, dtype=np.float64)
@@ -47,6 +49,7 @@ def solve_efficiency_only(W: Array, m: Array, *, method: str = "highs") -> Alloc
                       meta={"policy": "efficiency-only", "lp": res})
 
 
+@audited_solver
 def solve_noncoop(W: Array, m: Array, *, method: str = "highs") -> Allocation:
     """Non-cooperative OEF, Eq. (9): equal normalized throughput across users.
 
@@ -73,6 +76,7 @@ def solve_noncoop(W: Array, m: Array, *, method: str = "highs") -> Allocation:
                       meta={"policy": "oef-noncoop", "tau": tau, "lp": res})
 
 
+@audited_solver
 def solve_coop(W: Array, m: Array, *, method: str = "highs") -> Allocation:
     """Cooperative OEF, Eq. (10): envy-freeness constraints.
 
@@ -107,6 +111,7 @@ def solve_coop(W: Array, m: Array, *, method: str = "highs") -> Allocation:
                       meta={"policy": "oef-coop", "lp": res})
 
 
+@audited_solver
 def solve_noncoop_fast(
     W: Array, m: Array, *, iters: int = 80, tau_hint: Optional[float] = None
 ) -> Allocation:
@@ -182,7 +187,12 @@ def solve_noncoop_fast(
         else:
             hi = mid
     Xs = greedy(lo)
-    assert Xs is not None
+    if Xs is None:
+        raise RuntimeError(
+            f"water-filling bisection lost feasibility at tau={lo!r}; the "
+            f"bracket invariant (lo always feasible) is broken — report the "
+            f"(W, m) instance"
+        )
     X = np.zeros_like(Xs)
     X[order] = Xs
     return Allocation(X=X, rows=tuple(f"u{i}" for i in range(n)), W=W, m=m,
@@ -224,6 +234,7 @@ def mark_reused(prev: Allocation) -> Allocation:
                       meta={**prev.meta, "reused": True})
 
 
+@audited_solver
 def solve_incremental(
     W: Array,
     m: Array,

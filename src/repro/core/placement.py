@@ -64,7 +64,12 @@ class RoundingPlacer:
         run with; grants smaller than it are deferred (deviation keeps them).
         """
         ideal = np.asarray(ideal, dtype=np.float64)
-        assert ideal.shape == (self.n, self.k)
+        if ideal.shape != (self.n, self.k):
+            raise ValueError(
+                f"ideal share matrix has shape {ideal.shape}, expected "
+                f"(n={self.n}, k={self.k}); rebuild the placer when the "
+                f"tenant set or cluster changes"
+            )
         target = ideal + self.dev
         real = np.zeros((self.n, self.k), dtype=np.int64)
         for j in range(self.k):
@@ -182,7 +187,7 @@ class RoundingPlacer:
                 if all(user_budget[job.user, j] >= 0 for j, _, _ in pa):
                     ok = all(free[j][h] >= c for j, h, c in pa) and all(
                         user_budget[job.user, j] >= sum(c2 for j2, _, c2 in pa if j2 == j)
-                        for j in {j for j, _, _ in pa})
+                        for j in sorted({j for j, _, _ in pa}))
                     if ok:
                         for j, h, c in pa:
                             free[j][h] -= c

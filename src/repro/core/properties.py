@@ -6,6 +6,8 @@ benchmark, and the simulator's runtime assertions.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -199,6 +201,39 @@ def efficiency_optimality_gap(
     else:
         raise ValueError(constraint)
     return total_efficiency(W, opt.X) - total_efficiency(W, X)
+
+
+#: ``module.name -> wrapped solver`` for every @audited_solver entry point.
+AUDITED_SOLVERS: Dict[str, Callable[..., Allocation]] = {}
+
+
+def audit_enabled() -> bool:
+    """True when the ``REPRO_AUDIT`` env var requests audits globally."""
+    return os.environ.get("REPRO_AUDIT", "").strip().lower() in ("1", "true", "yes", "on")
+
+
+def audited_solver(fn: Callable[..., Allocation]) -> Callable[..., Allocation]:
+    """Contract decorator for solver entry points returning an ``Allocation``.
+
+    Adds an ``audit=`` keyword (default: :func:`audit_enabled`, i.e. the
+    ``REPRO_AUDIT`` env var). When enabled, the fairness/efficiency
+    :func:`property_report` for the returned allocation is attached at
+    ``alloc.meta["audit"]``, so any caller — the sweep harness, the online
+    service, a notebook — can audit every mechanism uniformly without knowing
+    its internals. Registration in :data:`AUDITED_SOLVERS` gives benchmarks a
+    single catalog of auditable mechanisms. Enforced by analysis rule C301.
+    """
+
+    @functools.wraps(fn)
+    def wrapper(*args, audit: Optional[bool] = None, **kwargs) -> Allocation:
+        alloc = fn(*args, **kwargs)
+        if audit if audit is not None else audit_enabled():
+            alloc.meta["audit"] = property_report(alloc.W, alloc.X, alloc.m)
+        return alloc
+
+    wrapper.__audited_solver__ = True
+    AUDITED_SOLVERS[f"{fn.__module__}.{fn.__name__}"] = wrapper
+    return wrapper
 
 
 def property_report(W: Array, X: Array, m: Array) -> Dict[str, object]:

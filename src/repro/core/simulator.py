@@ -152,7 +152,7 @@ class ClusterSimulator:
     def _evaluate(self, active: List[SimTenant], m: Array):
         import time
 
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # repro: noqa[D104] — telemetry only
         if self.use_weighted_oef and any(len(t.job_types) > 1 or t.weight != 1.0 for t in active):
             ten = [
                 Tenant(name=t.name, job_types=tuple(t.job_types.values()), weight=t.weight)
@@ -166,7 +166,7 @@ class ClusterSimulator:
             W = self._tenant_rows(active)
             alloc = POLICIES[self.policy_name](W, m)
             ideal, est = alloc.X, alloc.throughput
-        return ideal, est, W, time.perf_counter() - t0
+        return ideal, est, W, time.perf_counter() - t0  # repro: noqa[D104] — telemetry only
 
     # -- one scheduling round ------------------------------------------------
     def run(self, max_rounds: int = 10_000) -> SimResult:

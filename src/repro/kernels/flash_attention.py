@@ -85,7 +85,12 @@ def flash_attention(
 ) -> jnp.ndarray:
     B, H, Sq, D = q.shape
     Sk = k.shape[2]
-    assert Sq % block_q == 0 and Sk % block_k == 0, "seq must divide tile shapes"
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(
+            f"sequence lengths (Sq={Sq}, Sk={Sk}) must be divisible by the "
+            f"tile shapes (block_q={block_q}, block_k={block_k}); pad the "
+            f"inputs or pass smaller blocks"
+        )
     sm_scale = 1.0 / math.sqrt(D)
     BH = B * H
     qf = q.reshape(BH, Sq, D)

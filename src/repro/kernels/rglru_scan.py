@@ -47,7 +47,11 @@ def rglru_scan(
     interpret: bool = False,
 ) -> jnp.ndarray:
     B, S, D = a.shape
-    assert D % block_d == 0, "feature dim must divide block_d"
+    if D % block_d:
+        raise ValueError(
+            f"feature dim D={D} must be divisible by block_d={block_d}; "
+            f"pass a block_d that divides the model width"
+        )
     bt = min(block_t, S)
     while S % bt:
         bt //= 2

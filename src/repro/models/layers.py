@@ -256,7 +256,11 @@ def _blocked_attention(cfg: ArchConfig, q, k, v, *, window: Optional[int]) -> jn
     bq = min(cfg.attention_block_q, S)
     bkv = min(cfg.attention_block_kv, k.shape[1])
     T = k.shape[1]
-    assert S % bq == 0 and T % bkv == 0, "blocked attention needs divisible tiles"
+    if S % bq or T % bkv:
+        raise ValueError(
+            f"blocked attention needs divisible tiles: S={S} vs block_q={bq}, "
+            f"T={T} vs block_kv={bkv}; adjust attention_block_q/_kv in the config"
+        )
     nq, nk = S // bq, T // bkv
     scale = 1.0 / math.sqrt(D)
     dt = _dtype(cfg)

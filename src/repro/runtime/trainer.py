@@ -126,7 +126,11 @@ class Trainer:
 
     # -- fault tolerance / elasticity -----------------------------------------
     def restore_latest(self) -> int:
-        assert self.ckpt is not None, "no checkpoint dir configured"
+        if self.ckpt is None:
+            raise RuntimeError(
+                "restore_latest() requires a checkpoint dir; pass ckpt_dir to "
+                "the trainer config"
+            )
         self.ckpt.wait()
         shape = jax.eval_shape(lambda: self.state)
         self.state = self.ckpt.restore(shape, self._state_shardings)
@@ -135,7 +139,11 @@ class Trainer:
     def resize(self, new_mesh: Optional[Mesh]) -> None:
         """Elastic re-mesh: rebuild plan/step under ``new_mesh`` and reload
         the latest checkpoint with the new shardings."""
-        assert self.ckpt is not None, "elastic resize requires checkpointing"
+        if self.ckpt is None:
+            raise RuntimeError(
+                "elastic resize requires checkpointing; pass ckpt_dir to the "
+                "trainer config"
+            )
         self.ckpt.wait()
         self.mesh = new_mesh
         self.plan = make_plan(new_mesh, n_heads=self.cfg.n_heads,

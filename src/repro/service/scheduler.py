@@ -323,7 +323,7 @@ class OnlineScheduler:
     # ------------------------------------------------------------------
     def _effective_capacity(self) -> Array:
         m_eff = self.cluster.m_vec.copy()
-        for (j, h) in self.down_hosts:
+        for (j, h) in sorted(self.down_hosts):
             host_size = min(self.devices_per_host,
                             max(0, int(self.cluster.m[j]) - h * self.devices_per_host))
             m_eff[j] = max(0.0, m_eff[j] - host_size)
@@ -334,7 +334,10 @@ class OnlineScheduler:
         for job in self.jobs.values():
             if not job.finished and job.submit_time <= now:
                 has_work.add(job.tenant)
-        return [t for t in self.tenants.values() if t.present and t.name in has_work]
+        # Tenant registration order, restricted to the (sorted) worked set —
+        # never hash order, so replay is independent of PYTHONHASHSEED.
+        worked = frozenset(sorted(has_work))
+        return [t for t in self.tenants.values() if t.present and t.name in worked]
 
     def _solve_allocation(self, active: List[ServiceTenant], m_eff: Array):
         W = np.stack([
@@ -384,9 +387,9 @@ class OnlineScheduler:
             return
         m_eff = self._effective_capacity()
 
-        t0 = _time.perf_counter()
+        t0 = _time.perf_counter()  # repro: noqa[D104] — telemetry only
         ideal, est, W, reused = self._solve_allocation(active, m_eff)
-        solver_s = _time.perf_counter() - t0
+        solver_s = _time.perf_counter() - t0  # repro: noqa[D104] — telemetry only
 
         key = tuple(t.name for t in active)
         if self._placer is None or self._placer_key != key:
@@ -416,7 +419,7 @@ class OnlineScheduler:
         self._prev_assignments = placement.assignments
 
         # -- convert placements into continuous rates + predicted finishes --
-        placed_ids = set(placement.assignments)
+        placed_ids = frozenset(sorted(placement.assignments))
         req_ids = {r.job_id for r in reqs}
         for ui, t in enumerate(active):
             for job in tenant_jobs.get(t.name, []):

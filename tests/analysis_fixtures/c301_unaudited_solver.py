@@ -1,0 +1,6 @@
+"""Fixture: exactly one C301 (solver without @audited_solver)."""
+from repro.core.types import Allocation
+
+
+def solve_fixture(W, m) -> Allocation:  # C301
+    return Allocation(X=W, rows=("u0",), W=W, m=m)

@@ -1,0 +1,6 @@
+"""Fixture: exactly one C302 (mutable default argument)."""
+
+
+def enqueue(job, queue=[]):  # C302
+    queue.append(job)
+    return queue

@@ -1,0 +1,7 @@
+"""Fixture: exactly one C303 (bare assert as input validation)."""
+
+
+def normalize(shares):
+    assert shares, "shares must be non-empty"  # C303
+    total = sum(shares)
+    return [s / total for s in shares]

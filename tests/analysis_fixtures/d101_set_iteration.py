@@ -1,0 +1,7 @@
+"""Fixture: exactly one D101 (iteration over an unordered set)."""
+
+pending_hosts = {("a", 1), ("b", 2)}
+
+ordered = []
+for host in pending_hosts:  # D101
+    ordered.append(host)

@@ -1,0 +1,5 @@
+"""Fixture: exactly one D102 (float equality on event times)."""
+
+
+def same_instant(ev_time, next_time):
+    return ev_time == next_time  # D102

@@ -1,0 +1,6 @@
+"""Fixture: exactly one D103 (unseeded / global-state RNG)."""
+import numpy as np
+
+
+def jitter():
+    return np.random.rand()  # D103

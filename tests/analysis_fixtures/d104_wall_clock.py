@@ -1,0 +1,7 @@
+"""Fixture: exactly one D104 (wall-clock read in control-plane code)."""
+import time
+
+
+def stamp_event(event):
+    event["at"] = time.time()  # D104
+    return event

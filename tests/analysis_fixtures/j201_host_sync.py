@@ -1,0 +1,9 @@
+"""Fixture: exactly one J201 (host sync inside a jitted function)."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def total(x, scale):
+    return float(x.sum()) * scale  # J201

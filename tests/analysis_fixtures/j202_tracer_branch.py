@@ -1,0 +1,9 @@
+"""Fixture: exactly one J202 (Python control flow on a traced value)."""
+import jax
+
+
+@jax.jit
+def relu_ish(x):
+    if x > 0:  # J202
+        return x
+    return -x

@@ -1,0 +1,21 @@
+"""Fixture: exactly one J203 (index_map arity != grid rank).
+
+``interpret=True`` is present and the out_spec is consistent, so only the
+in_spec's 1-argument index_map against the rank-2 grid fires.
+"""
+import jax.experimental.pallas as pl
+
+
+def copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x, out_shape):
+    return pl.pallas_call(
+        copy_kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],  # J203
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=out_shape,
+        interpret=True,
+    )(x)
