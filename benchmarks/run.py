@@ -1,6 +1,10 @@
 """Benchmark aggregator: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Usage:
+Prints ``name,us_per_call,derived`` CSV; a module failure prints a FAILED
+row and flips the exit code but the rest still run. Running the
+``service_throughput`` module (directly or through here) regenerates
+``BENCH_service.json`` at the repo root — the artifact CI and docs track
+for solver-latency regressions. Figure map: docs/benchmarks.md. Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig9]
 """
 from __future__ import annotations

@@ -8,6 +8,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== static analysis (repro.analysis) =="
 python -m repro.analysis src --baseline analysis_baseline.txt
 
+echo "== docs: links + doctest snippets =="
+python scripts/check_docs.py
+
 echo "== tier-1 pytest =="
 python -m pytest -x -q "$@"
 

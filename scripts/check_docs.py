@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Docs health check: intra-repo markdown links + doctest-style snippets.
+
+Two passes over the repo's markdown (``README.md`` + ``docs/*.md`` by
+default):
+
+  1. **Links** — every relative link/image target ``[text](path)`` must
+     resolve to a file or directory in the repo (anchors and external
+     ``http(s)/mailto`` targets are skipped; an anchor-only link ``#section``
+     is checked against the headings of the same file).
+  2. **Doctests** — every fenced code block tagged ``python`` whose body
+     contains ``>>>`` is run through :mod:`doctest` with a fresh namespace
+     per file. Blocks tagged with other languages (or plain fences showing
+     shell transcripts) are ignored.
+
+Exit code 0 when everything passes; every failure is reported with
+``file:line``. Wired into ``scripts/check.sh`` and the CI docs job.
+
+Usage: PYTHONPATH=src python scripts/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import doctest
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```([^\n`]*)\n(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def default_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md"))
+    return files
+
+
+def anchor_of(heading: str) -> str:
+    """GitHub-style anchor: lowercase, spaces to dashes, punctuation dropped."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def check_links(path: str, text: str):
+    errors = []
+    anchors = {anchor_of(h) for h in HEADING_RE.findall(text)}
+    # fenced code often contains pseudo-links (indexing, shell); mask it out
+    masked = FENCE_RE.sub(lambda m: "\n" * m.group(0).count("\n"), text)
+    for match in LINK_RE.finditer(masked):
+        target = match.group(1)
+        line = masked.count("\n", 0, match.start()) + 1
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
+            continue
+        if target.startswith("#"):
+            if anchor_of(target[1:]) not in anchors:
+                errors.append((path, line, f"dangling anchor {target!r}"))
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        base = REPO if rel.startswith("/") else os.path.dirname(path)
+        resolved = os.path.normpath(os.path.join(base, rel.lstrip("/")))
+        if not os.path.exists(resolved):
+            errors.append((path, line, f"broken link {target!r}"))
+    return errors
+
+
+def check_doctests(path: str, text: str):
+    errors = []
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(verbose=False, optionflags=doctest.ELLIPSIS)
+    globs = {}  # shared across blocks within one file, like one long session
+    for match in FENCE_RE.finditer(text):
+        tag = match.group(1).strip().lower()
+        body = match.group(2)
+        if tag not in ("python", "pycon", "py") or ">>>" not in body:
+            continue
+        line = text.count("\n", 0, match.start()) + 1
+        test = parser.get_doctest(body, globs, f"{os.path.basename(path)}:{line}",
+                                  path, line)
+        result = runner.run(test, clear_globs=False)
+        if result.failed:
+            errors.append((path, line, f"{result.failed} doctest failure(s)"))
+        globs = test.globs
+    return errors
+
+
+def main(argv) -> int:
+    files = [os.path.abspath(a) for a in argv] or default_files()
+    errors = []
+    n_links = n_tests = 0
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        masked = FENCE_RE.sub("", text)
+        n_links += len(LINK_RE.findall(masked))
+        n_tests += sum(1 for m in FENCE_RE.finditer(text)
+                       if ">>>" in m.group(2))
+        errors += check_links(path, text)
+        errors += check_doctests(path, text)
+    for path, line, msg in errors:
+        print(f"{os.path.relpath(path, REPO)}:{line}: {msg}")
+    status = "FAIL" if errors else "ok"
+    print(f"docs check {status}: {len(files)} files, {n_links} intra-repo links, "
+          f"{n_tests} doctest blocks, {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -152,7 +152,7 @@ class HostSyncInJit(Rule):
         "force a blocking device->host transfer per call (or fail under "
         "trace); keep values on-device (jnp) and reduce with lax primitives."
     )
-    scope = ("repro/kernels/", "repro/runtime/", "repro/launch/")
+    scope = ("repro/kernels/", "repro/runtime/", "repro/launch/", "repro/core/")
 
     _SYNC_METHODS = {"item", "tolist", "numpy", "block_until_ready"}
     _NUMPY_MATERIALIZERS = {"asarray", "array", "copy", "frombuffer", "ascontiguousarray"}
@@ -203,7 +203,7 @@ class TracerControlFlow(Rule):
         "compiled program. Use jax.lax.cond/select/while_loop, or mark the "
         "argument static (static_argnames)."
     )
-    scope = ("repro/kernels/", "repro/runtime/", "repro/launch/")
+    scope = ("repro/kernels/", "repro/runtime/", "repro/launch/", "repro/core/")
 
     def check(self, ctx: ModuleContext) -> List[Finding]:
         findings: List[Finding] = []
@@ -255,7 +255,7 @@ class PallasCallContract(Rule):
         "hatch cannot be validated on CPU (every kernel here is CI-tested "
         "with interpret=True)."
     )
-    scope = ("repro/kernels/", "repro/runtime/", "repro/launch/")
+    scope = ("repro/kernels/", "repro/runtime/", "repro/launch/", "repro/core/")
 
     def check(self, ctx: ModuleContext) -> List[Finding]:
         findings: List[Finding] = []

@@ -29,7 +29,7 @@ import numpy as np
 from .lp import LPError, solve_lp
 from .oef import _capacity_constraints, _solve, allocation_reusable, mark_reused
 from .properties import audited_solver
-from .types import Allocation
+from .types import Allocation, default_rows
 
 Array = np.ndarray
 
@@ -41,7 +41,7 @@ def solve_maxmin(W: Array, m: Array) -> Allocation:
     m = np.asarray(m, dtype=np.float64)
     n, k = W.shape
     X = np.tile(m / n, (n, 1))
-    return Allocation(X=X, rows=tuple(f"u{i}" for i in range(n)), W=W, m=m,
+    return Allocation(X=X, rows=default_rows(n), W=W, m=m,
                       meta={"policy": "max-min"})
 
 
@@ -87,7 +87,7 @@ def solve_gavel(W: Array, m: Array, *, method: str = "highs") -> Allocation:
     b_eq = t_star * fair * (1 - 1e-12)
     res2 = _solve(c2, A_cap2, b_cap2, A_eq, b_eq, method)
     X = res2.x.reshape(n, k)
-    return Allocation(X=X, rows=tuple(f"u{i}" for i in range(n)), W=W, m=m,
+    return Allocation(X=X, rows=default_rows(n), W=W, m=m,
                       meta={"policy": "gavel", "t_star": t_star})
 
 
@@ -99,7 +99,7 @@ def solve_gandiva_fair(W: Array, m: Array) -> Allocation:
     n, k = W.shape
     X = np.tile(m / n, (n, 1))
     if n < 2 or k < 2:
-        return Allocation(X=X, rows=tuple(f"u{i}" for i in range(n)), W=W, m=m,
+        return Allocation(X=X, rows=default_rows(n), W=W, m=m,
                           meta={"policy": "gandiva-fair", "trades": 0})
     trades = 0
     # Pairs of (slow type lo, fast type hi), widest gap first — "always trades
@@ -111,7 +111,7 @@ def solve_gandiva_fair(W: Array, m: Array) -> Allocation:
     )
     for lo, hi in pairs:
         trades += _trade_pair(W, X, lo, hi)
-    return Allocation(X=X, rows=tuple(f"u{i}" for i in range(n)), W=W, m=m,
+    return Allocation(X=X, rows=default_rows(n), W=W, m=m,
                       meta={"policy": "gandiva-fair", "trades": trades})
 
 

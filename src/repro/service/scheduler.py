@@ -80,10 +80,30 @@ class ServiceTenant:
     weight: float = 1.0
     joined_at: float = 0.0
     left_at: Optional[float] = None
+    # cached mean of the job-type speedup vectors: rebuilding the solver's W
+    # row per re-solve is O(|job_types|) numpy calls per tenant, which at
+    # 1024 tenants costs more than the solve itself. Invalidated on
+    # PROFILE_UPDATE (the only post-join job_types mutation).
+    _mean_speedup: Optional[Array] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def present(self) -> bool:
         return self.left_at is None
+
+    def mean_speedup(self) -> Array:
+        if self._mean_speedup is None:
+            self._mean_speedup = np.stack(
+                [jt.speedup_vec() for jt in self.job_types.values()]).mean(axis=0)
+        return self._mean_speedup
+
+    def invalidate_profile_cache(self) -> None:
+        self._mean_speedup = None
+
+
+def _tenant_weighted(t: ServiceTenant) -> bool:
+    """Does this tenant force the weighted-OEF (virtual-user) path?"""
+    return len(t.job_types) > 1 or t.weight != 1.0
 
 
 class OnlineScheduler:
@@ -99,10 +119,13 @@ class OnlineScheduler:
         audit_every: int = 0,
         use_weighted_oef: bool = True,
         fast_noncoop: bool = True,
+        solver_backend: str = "numpy",
         placer_mode: str = "auto",
     ) -> None:
         if policy not in SERVICE_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; choose from {SERVICE_POLICIES}")
+        if solver_backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown solver backend {solver_backend!r}")
         self.cluster = cluster
         self.policy = policy
         self.devices_per_host = devices_per_host
@@ -112,6 +135,7 @@ class OnlineScheduler:
         self.audit_every = audit_every
         self.use_weighted_oef = use_weighted_oef and policy.startswith("oef")
         self.fast_noncoop = fast_noncoop
+        self.solver_backend = solver_backend
         if placer_mode == "auto":
             self.naive_placement = not policy.startswith("oef")
         else:
@@ -125,6 +149,17 @@ class OnlineScheduler:
 
         self._placer: Optional[RoundingPlacer] = None
         self._placer_key: Tuple[str, ...] = ()
+        # solver-input cache: the stacked W matrix and the weighted-OEF flag
+        # are pure functions of (active membership, tenant profiles); rebuild
+        # only when a join/leave changes the roster or a PROFILE_UPDATE bumps
+        # the epoch — at 1024 tenants the rebuild costs ~1 ms per re-solve.
+        self._profile_epoch = 0
+        self._solver_cache_key: Optional[Tuple[int, Tuple[str, ...]]] = None
+        self._solver_cache: Optional[Tuple[Array, bool]] = None
+        # count of present tenants needing the weighted-OEF path (multiple
+        # job types or weight != 1): when zero — the common case at large
+        # tenant counts — the per-solve any() scan is skipped entirely.
+        self._weighted_present = 0
         self._prev_alloc: Optional[Allocation] = None
         self._prev_assignments: Optional[Dict[str, List[Tuple[int, int, int]]]] = None
         self._running_jobs: List[ServiceJob] = []  # rate > 0 as of last solve
@@ -143,6 +178,16 @@ class OnlineScheduler:
     # main loop
     # ------------------------------------------------------------------
     def run(self, events: Sequence[Event], *, until: Optional[float] = None) -> ServiceReport:
+        if self.solver_backend == "jax":
+            # Hold one float64 scope across the whole replay: entering the
+            # x64 context per solve costs ~0.75 ms of jit-dispatch overhead,
+            # which would dominate the sub-5ms re-solve budget.
+            from ..core.jax_solve import x64_scope
+            with x64_scope():
+                return self._run(events, until=until)
+        return self._run(events, until=until)
+
+    def _run(self, events: Sequence[Event], *, until: Optional[float] = None) -> ServiceReport:
         queue = EventQueue(events)
         while True:
             if not queue:
@@ -233,13 +278,21 @@ class OnlineScheduler:
                     min_demand=int(d.get("min_demand", 1)))
                 for d in ev.payload.get("job_types", [])
             }
-            self.tenants[ev.tenant] = ServiceTenant(
+            old = self.tenants.get(ev.tenant)
+            if old is not None and old.present and _tenant_weighted(old):
+                self._weighted_present -= 1
+            t = ServiceTenant(
                 name=ev.tenant, job_types=jts,
                 weight=float(ev.payload.get("weight", 1.0)), joined_at=ev.time)
+            self.tenants[ev.tenant] = t
+            if _tenant_weighted(t):
+                self._weighted_present += 1
             self.metrics.on_tenant_join(ev.tenant, ev.time)
         elif k == EventKind.TENANT_LEAVE:
             t = self.tenants.get(ev.tenant)
             if t is not None:
+                if t.left_at is None and _tenant_weighted(t):
+                    self._weighted_present -= 1
                 t.left_at = ev.time
                 for job in self.jobs.values():
                     if job.tenant == ev.tenant and not job.finished:
@@ -265,10 +318,15 @@ class OnlineScheduler:
         elif k == EventKind.PROFILE_UPDATE:
             t = self.tenants.get(ev.tenant)
             if t is not None:
+                was_weighted = t.present and _tenant_weighted(t)
                 jt = ev.payload["job_type"]
                 t.job_types[jt] = JobTypeProfile(
                     name=jt, speedup=tuple(float(s) for s in ev.payload["speedup"]),
                     min_demand=t.job_types[jt].min_demand if jt in t.job_types else 1)
+                t.invalidate_profile_cache()
+                self._profile_epoch += 1
+                now_weighted = t.present and _tenant_weighted(t)
+                self._weighted_present += int(now_weighted) - int(was_weighted)
         else:
             raise ValueError(f"unhandled event kind: {k}")
         self._mark_dirty()
@@ -340,12 +398,16 @@ class OnlineScheduler:
         return [t for t in self.tenants.values() if t.present and t.name in worked]
 
     def _solve_allocation(self, active: List[ServiceTenant], m_eff: Array):
-        W = np.stack([
-            np.stack([jt.speedup_vec() for jt in t.job_types.values()]).mean(axis=0)
-            for t in active
-        ])
-        weighted = self.use_weighted_oef and any(
-            len(t.job_types) > 1 or t.weight != 1.0 for t in active)
+        key = (self._profile_epoch, tuple(t.name for t in active))
+        if self._solver_cache_key == key:
+            W, weighted = self._solver_cache
+        else:
+            W = np.empty((len(active), len(self.cluster.types)))
+            for i, t in enumerate(active):
+                W[i] = t.mean_speedup()
+            weighted = (self.use_weighted_oef and self._weighted_present > 0
+                        and any(_tenant_weighted(t) for t in active))
+            self._solver_cache_key, self._solver_cache = key, (W, weighted)
         if weighted:
             ten = [Tenant(name=t.name, job_types=tuple(t.job_types.values()), weight=t.weight)
                    for t in active]
@@ -353,7 +415,8 @@ class OnlineScheduler:
             ta = oef.evaluate_tenants(
                 ten, ClusterSpec(self.cluster.types, tuple(int(x) for x in m_eff)),
                 mode=mode, prev=self._prev_alloc,
-                fast=self.fast_noncoop and mode == "noncooperative")
+                fast=self.fast_noncoop and mode == "noncooperative",
+                backend=self.solver_backend)
             self._prev_alloc = ta.row_alloc
             ideal = ta.X
             est = np.einsum("lk,lk->l", W, ta.X)
@@ -362,7 +425,7 @@ class OnlineScheduler:
             if self.policy in OEF_POLICIES:
                 alloc = oef.solve_incremental(
                     W, m_eff, policy=self.policy, prev=self._prev_alloc,
-                    fast=self.fast_noncoop)
+                    fast=self.fast_noncoop, backend=self.solver_backend)
             else:
                 alloc = baselines.solve_incremental(
                     W, m_eff, policy=self.policy, prev=self._prev_alloc)

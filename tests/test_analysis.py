@@ -92,6 +92,7 @@ def test_rules_scope_real_tree_paths():
     assert d_rule.applies("src/repro/service/scheduler.py")
     assert not d_rule.applies("src/repro/kernels/flash_attention.py")
     assert j_rule.applies("src/repro/kernels/flash_attention.py")
+    assert j_rule.applies("src/repro/core/jax_solve.py")  # jitted solve tier
     assert not j_rule.applies("src/repro/service/scheduler.py")
     # Fixtures (no repro/ in the path) get every rule.
     assert d_rule.applies("tests/analysis_fixtures/d101_set_iteration.py")
