@@ -9,7 +9,12 @@ Replays seeded synthetic traces through the event-driven
   - the jax ladder (128/512/1024 tenants, ``oef-noncoop`` with
     ``backend="jax"``) — the batched jitted water-filling tier of
     ``repro.core.jax_solve``, prewarmed so jit compiles stay out of the
-    measured re-solve latency.
+    measured re-solve latency;
+  - the coop-jax ladder (64/128/256 tenants, ``oef-coop`` with
+    ``backend="jax"``) — the deduplicating primal–dual tier of
+    ``repro.core.jax_coop``; its ``BENCH_service.json`` keys carry a
+    ``_coopjax`` suffix so they never collide with the non-coop jax ladder.
+    The bar: the 256-tenant p95 stays below the LP ladder's 16-tenant figure.
 
 Reported per scale: decision throughput (solves/sec of wall time, with
 events/sec context) and re-solve latency mean/p95 plus the incremental-reuse
@@ -48,6 +53,15 @@ JAX_SCALES = (
     (1024, 128),
 )
 
+#: coop-jax ladder: the cooperative program on the primal–dual tier. The
+#: trace draws tenants from the paper's six-profile job-type catalog, so the
+#: reduced instance stays small after dedup regardless of tenant count.
+COOP_JAX_SCALES = (
+    (64, 8),
+    (128, 16),
+    (256, 32),
+)
+
 
 def _replay(n_tenants: int, scale: int, policy: str, backend: str,
             *, duration_s: float, mean_interarrival_s: float):
@@ -75,26 +89,34 @@ def run() -> list:
     rows = []
     dump = {}
 
-    ladders = [(SCALES, "oef-coop", "numpy", 3600.0, 300.0)]
+    ladders = [(SCALES, "oef-coop", "numpy", 3600.0, 300.0, "")]
     try:
-        from repro.core import jax_solve
+        from repro.core import jax_coop, jax_solve
     except ImportError:  # jax not installed: LP ladder only
-        jax_solve = None
+        jax_solve = jax_coop = None
     if jax_solve is not None:
-        ladders.append((JAX_SCALES, "oef-noncoop", "jax", 1800.0, 1200.0))
+        ladders.append((JAX_SCALES, "oef-noncoop", "jax", 1800.0, 1200.0, ""))
+        ladders.append((COOP_JAX_SCALES, "oef-coop", "jax", 1800.0, 1200.0,
+                        "_coopjax"))
 
-    for scales, policy, backend, duration_s, interarrival_s in ladders:
+    k = len(default_job_types("paper")[0].speedup)
+    for scales, policy, backend, duration_s, interarrival_s, suffix in ladders:
         if backend == "jax":
             # compile every padding bucket up front; compiles are a one-time
             # cost and must not pollute the p95 re-solve latency
-            jax_solve.prewarm(max(n for n, _ in scales), len(default_job_types("paper")[0].speedup))
+            if policy == "oef-coop":
+                # the PD tier solves the deduplicated instance: its buckets
+                # are group counts, bounded by the job-type catalog size
+                jax_coop.prewarm(len(default_job_types("paper")), k)
+            else:
+                jax_solve.prewarm(max(n for n, _ in scales), k)
         for n_tenants, scale in scales:
             report, wall = _replay(
                 n_tenants, scale, policy, backend,
                 duration_s=duration_s, mean_interarrival_s=interarrival_s)
             solves_per_s = report.n_solves / max(wall, 1e-9)
             events_per_s = report.n_events / max(wall, 1e-9)
-            tag = f"n{n_tenants}_m{8 * scale}x3"
+            tag = f"n{n_tenants}_m{8 * scale}x3{suffix}"
             rows.append((f"service/decide_{tag}", wall / max(report.n_solves, 1) * 1e6,
                          f"{solves_per_s:.0f} solves/s {events_per_s:.0f} ev/s"))
             rows.append((f"service/resolve_{tag}", report.resolve_latency_ms_mean * 1e3,
@@ -115,6 +137,8 @@ def run() -> list:
                 "resolve_latency_ms_mean": report.resolve_latency_ms_mean,
                 "resolve_latency_ms_p95": report.resolve_latency_ms_p95,
                 "jobs_finished": report.jobs_finished,
+                "fallback_count": report.fallback_count,
+                "solver_backends": report.solver_backends,
             }
     with open(BENCH_PATH, "w") as f:
         json.dump(dump, f, indent=2, sort_keys=True)

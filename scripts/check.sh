@@ -11,6 +11,9 @@ python -m repro.analysis src --baseline analysis_baseline.txt
 echo "== docs: links + doctest snippets =="
 python scripts/check_docs.py
 
+echo "== solver smoke: coop interpret rung + piecewise-Monge fallback gate =="
+python scripts/smoke_coop.py
+
 echo "== tier-1 pytest =="
 python -m pytest -x -q "$@"
 

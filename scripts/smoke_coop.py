@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""CI smoke for the cooperative jax tier and the piecewise-Monge fast path.
+
+Two gates, both fast enough for every CI run:
+
+  1. **coop interpret rung** — solve a seeded n=64 catalog instance with the
+     primal-dual tier *through the Pallas envy kernel in interpret mode*
+     (the TPU code path, minus the TPU), and require the duality certificate
+     plus an envy gap <= 1e-6.
+  2. **piecewise-Monge fallback rate** — dispatch a seeded suite of
+     block-ordered (piecewise-Monge, mostly non-Monge) instances through the
+     ``oef-noncoop`` registry chain and fail when more than 10% of them fall
+     back to the LP: a regression in ``classify_staircase`` or the
+     water-filling tiers shows up here before it shows up as benchmark drift.
+
+Usage: PYTHONPATH=src python scripts/smoke_coop.py
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+FALLBACK_SUITE = 50
+FALLBACK_MAX_RATE = 0.10
+
+
+def _catalog_instance(rng, n, g=5, k=3):
+    cat = np.cumprod(1.0 + rng.uniform(0.05, 1.0, size=(g, k)), axis=1)
+    cat /= cat[:, :1]
+    W = cat[rng.integers(0, g, size=n)]
+    m = rng.uniform(1.0, 4.0, size=k) * n / 4
+    return W, m
+
+
+def _piecewise_instance(rng, n, k=3):
+    # rows share a common ratio profile but carry arbitrary scales: always
+    # piecewise-Monge, generally not elementwise ordered (not legacy Monge)
+    b = np.sort(1.0 + rng.uniform(0.05, 1.0, size=n))
+    a = rng.uniform(0.5, 2.0, size=n)
+    W = a[:, None] * b[:, None] ** np.arange(k)
+    m = rng.uniform(1.0, 4.0, size=k) * n / 4
+    return W, m
+
+
+def coop_interpret_rung() -> str:
+    from repro.core import jax_coop
+
+    W, m = _catalog_instance(np.random.default_rng(0), 64)
+    alloc = jax_coop.solve_coop_pd(W, m, use_kernel=True, interpret=True)
+    lb, ub = alloc.meta["objective_bounds"]
+    if ub - lb > 1e-6 * max(abs(lb), 1.0):
+        raise SystemExit(f"coop certificate gap too wide: lb={lb} ub={ub}")
+    own = np.einsum("lk,lk->l", W, alloc.X)
+    envy = W @ alloc.X.T - own[:, None]
+    np.fill_diagonal(envy, 0.0)
+    if envy.max() > 1e-6:
+        raise SystemExit(f"coop interpret rung envy gap {envy.max():.3e} > 1e-6")
+    return (f"coop interpret rung ok: n=64 gap={ub - lb:.2e} "
+            f"envy={envy.max():.2e} crossover={alloc.meta['crossover']}")
+
+
+def piecewise_fallback_gate() -> str:
+    from repro.core import backends
+
+    rng = np.random.default_rng(1)
+    fallbacks = 0
+    for _ in range(FALLBACK_SUITE):
+        W, m = _piecewise_instance(rng, int(rng.integers(4, 48)))
+        alloc = backends.dispatch("oef-noncoop", W, m)
+        if alloc.meta["backend"] == "lp":
+            fallbacks += 1
+    rate = fallbacks / FALLBACK_SUITE
+    if rate > FALLBACK_MAX_RATE:
+        raise SystemExit(
+            f"piecewise-Monge suite fell back to the LP on "
+            f"{fallbacks}/{FALLBACK_SUITE} instances "
+            f"({rate:.0%} > {FALLBACK_MAX_RATE:.0%})")
+    return (f"piecewise-Monge fallback gate ok: {fallbacks}/{FALLBACK_SUITE} "
+            f"LP fallbacks ({rate:.0%})")
+
+
+def main() -> int:
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        print("smoke_coop: jax not importable; skipping the coop rung")
+        print(piecewise_fallback_gate())
+        return 0
+    print(coop_interpret_rung())
+    print(piecewise_fallback_gate())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -148,5 +148,61 @@ class BareAssert(Rule):
         return findings
 
 
+class UnregisteredBackendSolver(Rule):
+    rule_id = "C304"
+    title = "register_backend() called with a non-@audited_solver callable"
+    rationale = (
+        "The backend registry (core/backends.py) is the single dispatch "
+        "surface for every solver tier; registering a function that lacks "
+        "@audited_solver would let un-auditable allocations flow through "
+        "dispatch() and break the uniform property-audit contract. The "
+        "registry enforces this at import time (ValueError) — this rule "
+        "catches it before the module is ever imported."
+    )
+    scope = ("repro/",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        audited = {
+            node.name
+            for node in ctx.tree.body
+            if isinstance(node, ast.FunctionDef) and _has_audit_decorator(node)
+        }
+        local_fns = {
+            node.name
+            for node in ctx.tree.body
+            if isinstance(node, ast.FunctionDef)
+        }
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if terminal_name(node.func) != "register_backend":
+                continue
+            solver = self._solver_arg(node)
+            # only Name references to module-local functions are statically
+            # resolvable; imported callables are checked at import time by
+            # the registry itself.
+            if not isinstance(solver, ast.Name) or solver.id not in local_fns:
+                continue
+            if solver.id not in audited:
+                findings.append(ctx.finding(
+                    node, self.rule_id,
+                    f"register_backend() registers {solver.id!r} which is not "
+                    f"an @audited_solver entry point; decorate it so every "
+                    f"registry backend stays auditable",
+                ))
+        return findings
+
+    @staticmethod
+    def _solver_arg(call: ast.Call) -> Optional[ast.AST]:
+        for kw in call.keywords:
+            if kw.arg == "solver":
+                return kw.value
+        if len(call.args) >= 3:
+            return call.args[2]
+        return None
+
+
 def rules() -> List[Rule]:
-    return [UnauditedSolver(), MutableDefaultArg(), BareAssert()]
+    return [UnauditedSolver(), MutableDefaultArg(), BareAssert(),
+            UnregisteredBackendSolver()]

@@ -21,9 +21,17 @@ from .types import (  # noqa: F401
     validate_speedup_matrix,
 )
 from .lp import LPError, LPResult, solve_lp  # noqa: F401
+from .backends import (  # noqa: F401
+    BackendError,
+    BackendSpec,
+    dispatch,
+    register_backend,
+    resolve_backend,
+)
 from .oef import (  # noqa: F401
     TenantAllocation,
     allocation_reusable,
+    classify_staircase,
     evaluate_tenants,
     expand_virtual_users,
     solve_coop,
@@ -31,6 +39,8 @@ from .oef import (  # noqa: F401
     solve_incremental,
     solve_noncoop,
     solve_noncoop_fast,
+    solve_noncoop_waterfill,
+    solve_noncoop_waterfill_jax,
 )
 from .baselines import solve_gandiva_fair, solve_gavel, solve_maxmin  # noqa: F401
 from .properties import (  # noqa: F401

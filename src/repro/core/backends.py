@@ -1,0 +1,186 @@
+"""Solver backend registry: one strategy layer for every OEF/baseline program.
+
+Before this module, backend selection was ad-hoc ``backend=`` plumbing
+duplicated across ``core/oef.py``, ``service/scheduler.py`` and
+``service/__main__.py``, and each call site re-implemented the "try the fast
+tier, fall back to the LP" dance with its own ``meta`` stamping. The registry
+centralizes all of it:
+
+  - :func:`register_backend` declares a ``(program, backend)`` implementation
+    — which *program* it solves (``oef-noncoop``, ``oef-coop``, ...), which
+    *instance class* it is exact on (``any`` | ``piecewise-monge``), and its
+    *fallback* backend for instances it declines;
+  - :func:`resolve_backend` looks an implementation up (importing lazy
+    providers such as the jax tiers on first use);
+  - :func:`dispatch` runs the chain: a backend that cannot handle an instance
+    raises :class:`BackendError` and dispatch falls through to its declared
+    fallback, recording ``meta["backend"]`` / ``meta["fallback_from"]`` /
+    ``meta["fallback_reason"]`` in exactly one place.
+
+Every registered solver must be an ``@audited_solver`` entry point (enforced
+here at registration time and statically by analysis rule C304), so the
+property-audit surface stays uniform no matter which tier produced the
+allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import inspect
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .types import Allocation
+
+
+class BackendError(RuntimeError):
+    """A backend declined an instance (off-class, or it failed to converge).
+
+    Raising this from a registered solver is the fallback protocol:
+    :func:`dispatch` catches it and retries on the backend's declared
+    fallback. Anything else (bad input, missing dependency) should raise
+    ``ValueError`` / ``RuntimeError`` as usual and will propagate.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered ``(program, backend)`` implementation."""
+
+    program: str
+    backend: str
+    solver: Callable[..., Allocation]
+    #: instance family the solver is exact on: "any", or "piecewise-monge"
+    #: (the staircase class of ``oef.classify_staircase``).
+    instance_class: str = "any"
+    #: backend name (same program) to fall through to on BackendError.
+    fallback: Optional[str] = None
+    #: keyword names the solver accepts — dispatch() filters its kwargs so
+    #: one call site can pass the union (tau_hint, method, prev_state, ...).
+    accepts: Tuple[str, ...] = ()
+
+
+_REGISTRY: Dict[Tuple[str, str], BackendSpec] = {}
+_DEFAULT: Dict[str, str] = {}
+
+#: providers that register on import — keeps jax strictly optional until a
+#: caller actually asks for a jax tier.
+_LAZY_PROVIDERS: Dict[Tuple[str, str], str] = {
+    ("oef-coop", "jax"): "repro.core.jax_coop",
+}
+
+
+def register_backend(
+    program: str,
+    backend: str,
+    solver: Callable[..., Allocation],
+    *,
+    instance_class: str = "any",
+    fallback: Optional[str] = None,
+    default: bool = False,
+) -> Callable[..., Allocation]:
+    """Register ``solver`` as the ``backend`` implementation of ``program``.
+
+    ``solver`` must carry ``@audited_solver`` (analysis rule C304 checks the
+    same contract statically); ``fallback`` names another backend of the same
+    program to try when this one raises :class:`BackendError`; ``default``
+    marks the program's default chain entry. Returns ``solver`` unchanged so
+    it can be used as a post-decorator.
+    """
+    if not getattr(solver, "__audited_solver__", False):
+        raise ValueError(
+            f"backend {backend!r} for program {program!r}: solver "
+            f"{getattr(solver, '__name__', solver)!r} is not an "
+            f"@audited_solver entry point (rule C304)")
+    params = inspect.signature(solver).parameters
+    accepts = tuple(
+        p.name for p in params.values()
+        if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                      inspect.Parameter.KEYWORD_ONLY))
+    _REGISTRY[(program, backend)] = BackendSpec(
+        program=program, backend=backend, solver=solver,
+        instance_class=instance_class, fallback=fallback, accepts=accepts)
+    if default or program not in _DEFAULT:
+        _DEFAULT[program] = backend
+    return solver
+
+
+def resolve_backend(program: str, backend: Optional[str] = None) -> BackendSpec:
+    """Look up a registered implementation (importing lazy providers)."""
+    if backend is None:
+        backend = default_backend(program)
+    key = (program, backend)
+    spec = _REGISTRY.get(key)
+    if spec is None and key in _LAZY_PROVIDERS:
+        importlib.import_module(_LAZY_PROVIDERS[key])
+        spec = _REGISTRY.get(key)
+        if spec is None:
+            raise RuntimeError(
+                f"lazy provider {_LAZY_PROVIDERS[key]!r} imported but did not "
+                f"register {key!r} — provider/registry mismatch")
+    if spec is None:
+        raise ValueError(
+            f"no backend {backend!r} registered for program {program!r}; "
+            f"available: {backends_for(program)}")
+    return spec
+
+
+def default_backend(program: str) -> str:
+    if program not in _DEFAULT:
+        raise ValueError(
+            f"unknown program {program!r}; known: {sorted(programs())}")
+    return _DEFAULT[program]
+
+
+def programs() -> List[str]:
+    """All program names with at least one registered (or lazy) backend."""
+    names = {p for p, _ in _REGISTRY} | {p for p, _ in _LAZY_PROVIDERS}
+    return sorted(names)
+
+
+def backends_for(program: str) -> List[str]:
+    """Backend names registered (or lazily importable) for ``program``."""
+    names = {b for p, b in _REGISTRY if p == program}
+    names |= {b for p, b in _LAZY_PROVIDERS if p == program}
+    return sorted(names)
+
+
+def backend_names() -> List[str]:
+    """Every backend name any program can route to (CLI ``--backend`` choices)."""
+    names = {b for _, b in _REGISTRY} | {b for _, b in _LAZY_PROVIDERS}
+    return sorted(names)
+
+
+def dispatch(program: str, W, m, *, backend: Optional[str] = None,
+             **kwargs) -> Allocation:
+    """Solve ``program`` on ``(W, m)`` via the backend chain.
+
+    Starts at ``backend`` (or the program default) and walks declared
+    fallbacks on :class:`BackendError`. Extra keyword arguments are filtered
+    per backend by the registered signature, so callers can pass the union
+    (``tau_hint=`` for the water-filling tiers, ``method=`` for the LPs,
+    ``prev_state=`` for the coop primal–dual tier, ...).
+
+    The returned allocation's ``meta`` is stamped here — the single place
+    backend attribution lives: ``meta["backend"]`` is the tier that actually
+    produced the answer, and after a fallback ``meta["fallback_from"]`` /
+    ``meta["fallback_reason"]`` describe the first declined attempt.
+    """
+    spec = resolve_backend(program, backend)
+    attempts: List[Tuple[str, str]] = []
+    while True:
+        try:
+            alloc = spec.solver(
+                W, m, **{k: v for k, v in kwargs.items() if k in spec.accepts})
+        except BackendError as e:
+            attempts.append((spec.backend, str(e)))
+            if spec.fallback is None:
+                raise BackendError(
+                    f"program {program!r}: every backend in the chain "
+                    f"declined: {attempts}") from e
+            spec = resolve_backend(program, spec.fallback)
+            continue
+        alloc.meta["backend"] = spec.backend
+        if attempts:
+            alloc.meta["fallback_from"] = attempts[0][0]
+            alloc.meta["fallback_reason"] = attempts[0][1]
+        return alloc

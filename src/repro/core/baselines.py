@@ -26,6 +26,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from . import backends
 from .lp import LPError, solve_lp
 from .oef import _capacity_constraints, _solve, allocation_reusable, mark_reused
 from .properties import audited_solver
@@ -164,6 +165,14 @@ ALL_POLICIES = {
     "gandiva-fair": solve_gandiva_fair,
 }
 
+# Registry wiring: each baseline is the sole backend of its own program —
+# max-min and Gandiva_fair are closed-form/combinatorial ("numpy"), Gavel is
+# a two-stage LP ("lp"). No fallbacks: every baseline covers all instances.
+backends.register_backend("max-min", "numpy", solve_maxmin, default=True)
+backends.register_backend("gavel", "lp", solve_gavel, default=True)
+backends.register_backend("gandiva-fair", "numpy", solve_gandiva_fair,
+                          default=True)
+
 
 @audited_solver
 def solve_incremental(
@@ -184,6 +193,4 @@ def solve_incremental(
         return mark_reused(prev)
     if policy not in ALL_POLICIES:
         raise ValueError(f"unknown baseline policy: {policy}")
-    if policy == "gavel":
-        return solve_gavel(W, m, method=method)
-    return ALL_POLICIES[policy](W, m)
+    return backends.dispatch(policy, W, m, method=method)

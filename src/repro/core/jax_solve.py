@@ -25,11 +25,13 @@ repo's model stack runs float32 — so x64 is enabled *scoped*, via
 :func:`x64_scope` around each entry point (and held open across a replay by
 hot-loop callers), never globally.
 
-This tier only covers consistently-ordered (Monge) instances — exactly the
-class where the greedy staircase is provably optimal. Callers go through
-``oef.solve_noncoop_fast(backend="jax")``, which falls back to the scipy LP
-for anything else; the standalone entry points here raise ``ValueError``
-instead so a silent wrong answer is impossible.
+This tier only covers the (piecewise-)Monge staircase class of
+``oef.classify_staircase`` — exactly where the greedy staircase is provably
+optimal. Callers go through the backend registry
+(``oef.solve_noncoop_fast(backend="jax")`` or
+``backends.dispatch("oef-noncoop", ..., backend="jax")``), which falls back
+to the scipy LP for anything else; the standalone entry points here raise
+``ValueError`` instead so a silent wrong answer is impossible.
 """
 from __future__ import annotations
 
@@ -155,11 +157,11 @@ def _prepare(
 ) -> Tuple[Array, Array, Array, Array]:
     """Validate + sort + pad one instance; returns (order, Wf, m64, mask).
 
-    ``presorted`` is the (order, Ws) pair a caller that already sorted and
-    Monge-checked the instance (``oef.solve_noncoop_fast``) passes down so
-    the argsort and ratio check are not repeated on the hot path.
+    ``presorted`` is the (order, Ws) pair a caller that already classified
+    the instance (``oef.solve_noncoop_waterfill_jax``) passes down so the
+    argsort and class checks are not repeated on the hot path.
     """
-    from .oef import _consistently_ordered  # deferred: oef lazily imports us
+    from .oef import classify_staircase  # deferred: oef lazily imports us
 
     W = np.asarray(W, dtype=np.float64)
     m = np.asarray(m, dtype=np.float64)
@@ -168,13 +170,14 @@ def _prepare(
     if presorted is not None:
         order, Ws = presorted
     else:
-        order = np.argsort(W[:, -1], kind="stable")
-        Ws = W[order]
-        if not _consistently_ordered(Ws):
+        cls = classify_staircase(W)
+        if cls is None:
             raise ValueError(
-                "instance is not consistently ordered (Monge); the closed-form "
-                "water-filling does not apply — solve via the LP instead "
-                "(oef.solve_noncoop_fast handles this fallback automatically)")
+                "instance is neither consistently ordered (Monge) nor "
+                "piecewise-Monge; the closed-form water-filling does not "
+                "apply — solve via the LP instead (the oef-noncoop backend "
+                "chain handles this fallback automatically)")
+        _, order, Ws = cls
     Wf, mask = _pad_sorted(Ws, W.shape[1])
     return order, Wf, m, mask
 

@@ -8,21 +8,31 @@ Implements:
   - ``solve_efficiency_only`` — Eq. (4): unconstrained throughput max (used to
     demonstrate the conflicts of §3.1, not a real policy);
   - weighted OEF + multi-job-type tenants via *row replication* (§4.2.3/4.2.4);
-  - ``solve_noncoop_fast`` — beyond-paper O(n log n + n·k) exact water-filling
-    solver for consistently-ordered instances (validated against the LP).
+  - ``solve_noncoop_waterfill`` / ``solve_noncoop_waterfill_jax`` —
+    beyond-paper O(n log n + n·k) exact water-filling for the
+    (piecewise-)Monge staircase class (see :func:`classify_staircase`),
+    validated against the LP;
+  - ``solve_noncoop_fast`` — the historical fast entry point, now a thin
+    shim over :func:`repro.core.backends.dispatch`.
 
-All solvers return an :class:`Allocation` over *rows* (virtual users); use
-:func:`evaluate_tenants` for the tenant-level API with folding.
+Backend selection is the registry's job (:mod:`repro.core.backends`): this
+module registers the LP solvers as the ``"lp"`` backends, the numpy
+water-filling as ``"numpy"`` (the ``oef-noncoop`` default, LP fallback) and
+the jax tiers as ``"jax"``. All solvers return an :class:`Allocation` over
+*rows* (virtual users); use :func:`evaluate_tenants` for the tenant-level API
+with folding.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import backends
 from .lp import LPError, LPResult, solve_lp
 from .properties import audited_solver
 from .types import (
@@ -119,61 +129,43 @@ def solve_coop(W: Array, m: Array, *, method: str = "highs") -> Allocation:
 
 
 @audited_solver
-def solve_noncoop_fast(
+def solve_noncoop_waterfill(
     W: Array,
     m: Array,
     *,
     iters: int = 80,
     tau_hint: Optional[float] = None,
-    backend: str = "numpy",
 ) -> Allocation:
     """Beyond-paper exact combinatorial solver for non-cooperative OEF.
 
-    Exploits the adjacency structure (Thm 5.2 / Lemma 3.1): on *consistently
-    ordered* instances (device types sorted slowest->fastest for every user,
-    and users totally ordered by elementwise speedup), the optimal allocation
-    is a staircase: process users from fastest to slowest, assigning the
-    fastest remaining capacity until each reaches the common throughput tau.
-    tau* is found by monotone bisection on the greedy feasibility check —
-    O((n + k) log(1/eps)) versus the LP's superlinear cost. Falls back to the
-    LP when the instance is not consistently ordered.
+    Exploits the adjacency structure (Thm 5.2 / Lemma 3.1): on instances in
+    the *(piecewise-)Monge staircase class* (:func:`classify_staircase`), the
+    optimal allocation is a staircase: process users from fastest to slowest,
+    assigning the fastest remaining capacity until each reaches the common
+    throughput tau. tau* is found by monotone bisection on the greedy
+    feasibility check — O((n + k) log(1/eps)) versus the LP's superlinear
+    cost.
 
     ``tau_hint`` warm-starts the bisection from a previous solve's tau (the
     online service passes the last equal-throughput level): the bracket is
     found by exponential growth/shrink around the hint, so a re-solve after a
     small capacity/population change converges in a handful of probes.
 
-    ``backend`` selects the execution tier: ``"numpy"`` (this sequential
-    greedy) or ``"jax"`` — the batched, JIT-compiled multisection of
-    :mod:`repro.core.jax_solve`, exact to <=1e-9 against this path and ~20x
-    faster at 1024 users. Both tiers fall back to the LP on instances that
-    are not consistently ordered.
+    Instances outside the staircase class raise
+    :class:`~repro.core.backends.BackendError`: this is the registered
+    ``"numpy"`` backend (and default) of program ``oef-noncoop`` with
+    fallback ``"lp"``, so callers going through the registry get the exact LP
+    automatically.
     """
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown solver backend: {backend!r}")
     W = np.asarray(W, dtype=np.float64)
     m = np.asarray(m, dtype=np.float64)
     n, k = W.shape
-    order = np.argsort(W[:, -1], kind="stable")  # slowest ... fastest on top type
-    Ws = W[order]
-    if not _consistently_ordered(Ws):
-        alloc = solve_noncoop(W, m)
-        alloc.meta["fast_path"] = False
-        alloc.meta["backend"] = "lp"
-        return alloc
-    if backend == "jax":
-        try:
-            from . import jax_solve
-        except ImportError as e:  # jax not installed: the exact LP still works
-            raise RuntimeError(
-                "backend='jax' requires jax; install it or use backend='numpy'"
-            ) from e
-        tau, X = jax_solve.solve_noncoop_fast_jax(
-            W, m, tau_hint=tau_hint, _presorted=(order, Ws))
-        return Allocation(X=X, rows=default_rows(n), W=W, m=m,
-                          meta={"policy": "oef-noncoop", "tau": tau,
-                                "fast_path": True, "backend": "jax",
-                                "warm_started": tau_hint is not None})
+    cls = classify_staircase(W)
+    if cls is None:
+        raise backends.BackendError(
+            "instance is outside the (piecewise-)Monge staircase class; the "
+            "greedy water-filling is not provably optimal — solve via the LP")
+    klass, order, Ws = cls
 
     def greedy(tau: float) -> Optional[Array]:
         """Fill users fastest-first from fastest types; None if infeasible."""
@@ -231,7 +223,92 @@ def solve_noncoop_fast(
     X[order] = Xs
     return Allocation(X=X, rows=default_rows(n), W=W, m=m,
                       meta={"policy": "oef-noncoop", "tau": lo, "fast_path": True,
-                            "backend": "numpy", "warm_started": warm})
+                            "instance_class": klass, "warm_started": warm})
+
+
+@audited_solver
+def solve_noncoop_waterfill_jax(
+    W: Array,
+    m: Array,
+    *,
+    tau_hint: Optional[float] = None,
+) -> Allocation:
+    """Water-filling on the jax tier: the ``"jax"`` backend of ``oef-noncoop``.
+
+    Same staircase class and same answers (<=1e-9) as
+    :func:`solve_noncoop_waterfill`, but the bisection runs as a batched,
+    JIT-compiled multisection (:mod:`repro.core.jax_solve`) — ~20x faster at
+    1024 users. Off-class instances raise
+    :class:`~repro.core.backends.BackendError` (registry falls back to the
+    LP); a missing jax install raises ``RuntimeError`` since that is an
+    environment problem, not an instance property.
+    """
+    W = np.asarray(W, dtype=np.float64)
+    m = np.asarray(m, dtype=np.float64)
+    n, k = W.shape
+    cls = classify_staircase(W)
+    if cls is None:
+        raise backends.BackendError(
+            "instance is outside the (piecewise-)Monge staircase class; the "
+            "greedy water-filling is not provably optimal — solve via the LP")
+    klass, order, Ws = cls
+    try:
+        from . import jax_solve
+    except ImportError as e:  # jax not installed: the exact LP still works
+        raise RuntimeError(
+            "backend='jax' requires jax; install it or use backend='numpy'"
+        ) from e
+    tau, X = jax_solve.solve_noncoop_fast_jax(
+        W, m, tau_hint=tau_hint, _presorted=(order, Ws))
+    return Allocation(X=X, rows=default_rows(n), W=W, m=m,
+                      meta={"policy": "oef-noncoop", "tau": tau,
+                            "fast_path": True, "instance_class": klass,
+                            "warm_started": tau_hint is not None})
+
+
+_BACKEND_KWARG_WARNED = False
+
+
+def _warn_backend_kwarg(fn: str) -> None:
+    """One DeprecationWarning per process for the legacy ``backend=`` kwarg."""
+    global _BACKEND_KWARG_WARNED
+    if not _BACKEND_KWARG_WARNED:
+        warnings.warn(
+            f"{fn}(backend=...) is deprecated; use repro.core.backends."
+            f"dispatch(program, W, m, backend=...) or drop the kwarg to get "
+            f"the program's default backend chain",
+            DeprecationWarning, stacklevel=3)
+        _BACKEND_KWARG_WARNED = True
+
+
+@audited_solver
+def solve_noncoop_fast(
+    W: Array,
+    m: Array,
+    *,
+    iters: int = 80,
+    tau_hint: Optional[float] = None,
+    backend: Optional[str] = None,
+) -> Allocation:
+    """Fast non-cooperative solve via the backend registry (historical shim).
+
+    Dispatches program ``oef-noncoop`` through
+    :func:`repro.core.backends.dispatch`: by default the numpy water-filling
+    with automatic LP fallback, ``backend="jax"`` for the jitted tier,
+    ``backend="lp"`` to force the LP. Passing an explicit ``backend`` string
+    here is deprecated (warned once per process) — new code should call
+    ``backends.dispatch`` or rely on the default chain.
+
+    ``meta`` keeps the historical contract: ``meta["backend"]`` names the
+    tier that produced the answer and ``meta["fast_path"]`` is False exactly
+    when the LP did.
+    """
+    if backend is not None:
+        _warn_backend_kwarg("solve_noncoop_fast")
+    alloc = backends.dispatch("oef-noncoop", W, m, backend=backend,
+                              iters=iters, tau_hint=tau_hint)
+    alloc.meta.setdefault("fast_path", alloc.meta.get("backend") != "lp")
+    return alloc
 
 
 # ---------------------------------------------------------------------------
@@ -277,31 +354,40 @@ def solve_incremental(
     prev: Optional[Allocation] = None,
     method: str = "highs",
     fast: bool = True,
-    backend: str = "numpy",
+    backend: Optional[str] = None,
 ) -> Allocation:
     """Warm-started re-solve of an OEF program for the online service.
 
     - unchanged instance  -> returns ``prev`` flagged ``reused`` (zero cost);
     - ``oef-noncoop`` with a previous tau -> warm-starts the water-filling
       bisection via ``tau_hint``;
+    - ``oef-coop`` on the jax tier -> warm-starts the primal–dual state from
+      ``prev.meta["pd_state"]``;
     - otherwise -> cold solve of the named policy.
 
-    ``backend`` selects the fast non-cooperative tier (``"numpy"`` | ``"jax"``,
-    see :func:`solve_noncoop_fast`); the LP-based policies ignore it.
+    ``backend`` names a registry backend chain (None = the program's default:
+    numpy water-filling for ``oef-noncoop``, the LP for ``oef-coop``). For
+    ``oef-coop``, ``"numpy"`` is accepted as an alias of the LP default so a
+    service configured with one backend can run every policy.
     """
     if allocation_reusable(prev, W, m, policy=_POLICY_META.get(policy, policy)):
         return mark_reused(prev)
     if policy in ("oef-noncoop", "noncooperative"):
         hint = prev.meta.get("tau") if prev is not None else None
         if fast:
-            return solve_noncoop_fast(
-                W, m, tau_hint=hint if isinstance(hint, float) else None,
-                backend=backend)
+            alloc = backends.dispatch(
+                "oef-noncoop", W, m, backend=backend, iters=80,
+                tau_hint=hint if isinstance(hint, float) else None)
+            alloc.meta.setdefault("fast_path", alloc.meta.get("backend") != "lp")
+            return alloc
         return solve_noncoop(W, m, method=method)
     if policy in ("oef-coop", "cooperative"):
-        return solve_coop(W, m, method=method)
+        prev_state = prev.meta.get("pd_state") if prev is not None else None
+        return backends.dispatch(
+            "oef-coop", W, m, backend=None if backend == "numpy" else backend,
+            method=method, prev_state=prev_state)
     if policy == "efficiency-only":
-        return solve_efficiency_only(W, m, method=method)
+        return backends.dispatch("efficiency-only", W, m, method=method)
     raise ValueError(f"unknown OEF policy: {policy}")
 
 
@@ -325,6 +411,47 @@ def _consistently_ordered(Ws: Array, tol: float = 1e-9) -> bool:
         return False
     ratios = Ws[1:] / np.maximum(Ws[:-1], 1e-300)
     return bool(np.all(np.diff(ratios, axis=1) >= -tol))
+
+
+def classify_staircase(
+    W: Array, tol: float = 1e-9
+) -> Optional[Tuple[str, Array, Array]]:
+    """Staircase-class classifier for the water-filling tiers.
+
+    Returns ``(instance_class, order, Ws)`` — the row order (slowest first)
+    under which the fastest-user-takes-fastest-type greedy is provably exact
+    — or ``None`` when the instance is outside the class (solve the LP).
+
+    Two nested classes are recognized, checked in order so the historical
+    behavior on the first is bit-identical:
+
+    - ``"monge"`` — the consistently-ordered class: rows sorted by the
+      fastest-type speedup are elementwise totally ordered, columns ascend,
+      and consecutive-user speedup ratios are non-decreasing in the type
+      index (:func:`_consistently_ordered`).
+    - ``"piecewise-monge"`` — the block-ordered extension: elementwise row
+      domination is dropped. Rows are sorted by *comparative advantage*
+      (the fast/slow speedup ratio ``w[:, -1] / w[:, 0]``); the class needs
+      each row non-decreasing across types and the consecutive-user ratio
+      rows non-decreasing in the type index. Users tied in comparative
+      advantage form interchangeable blocks — hence the name — and the
+      exchange argument for greedy optimality goes through per block
+      boundary exactly as in the Monge case (validated against the LP on
+      randomized block-ordered suites; see docs/solvers.md for a worked
+      example and tests/test_oef.py for the counterexample kept outside).
+    """
+    Wv = np.asarray(W, dtype=np.float64)
+    order = np.argsort(Wv[:, -1], kind="stable")  # slowest ... fastest on top type
+    Ws = Wv[order]
+    if _consistently_ordered(Ws, tol=tol):
+        return "monge", order, Ws
+    order = np.argsort(Wv[:, -1] / np.maximum(Wv[:, 0], 1e-300), kind="stable")
+    Ws = Wv[order]
+    if np.all(np.diff(Ws, axis=1) >= -tol):
+        ratios = Ws[1:] / np.maximum(Ws[:-1], 1e-300)
+        if bool(np.all(np.diff(ratios, axis=1) >= -tol)):
+            return "piecewise-monge", order, Ws
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -405,15 +532,16 @@ def evaluate_tenants(
     method: str = "highs",
     fast: bool = False,
     prev: Optional[Allocation] = None,
-    backend: str = "numpy",
+    backend: Optional[str] = None,
 ) -> TenantAllocation:
     """Tenant-level fair-share evaluation with weights and multi-job types.
 
     ``prev`` (the previous round's *row-level* allocation, i.e.
     ``TenantAllocation.row_alloc``) enables the incremental-solve path: when
     the expanded virtual-user instance is unchanged the old allocation is
-    reused outright, otherwise it seeds the warm start. ``backend`` selects
-    the fast non-cooperative tier (see :func:`solve_noncoop_fast`).
+    reused outright, otherwise it seeds the warm start. ``backend`` names a
+    registry backend chain (see :mod:`repro.core.backends`); None picks each
+    program's default.
     """
     W_virt, row_map, replication = expand_virtual_users(tenants, cluster.k)
     m = cluster.m_vec
@@ -421,10 +549,15 @@ def evaluate_tenants(
         alloc = solve_incremental(W_virt, m, policy=mode, prev=prev, method=method,
                                   fast=fast, backend=backend)
     elif mode == "noncooperative":
-        alloc = (solve_noncoop_fast(W_virt, m, backend=backend) if fast
-                 else solve_noncoop(W_virt, m, method=method))
+        if fast:
+            alloc = backends.dispatch("oef-noncoop", W_virt, m, backend=backend)
+            alloc.meta.setdefault("fast_path", alloc.meta.get("backend") != "lp")
+        else:
+            alloc = solve_noncoop(W_virt, m, method=method)
     elif mode == "cooperative":
-        alloc = solve_coop(W_virt, m, method=method)
+        alloc = backends.dispatch(
+            "oef-coop", W_virt, m,
+            backend=None if backend == "numpy" else backend, method=method)
     else:
         raise ValueError(f"unknown mode: {mode}")
     n_t = len(tenants)
@@ -459,3 +592,19 @@ def _solve(c, A_ub, b_ub, A_eq, b_eq, method: str) -> LPResult:
     if not res.ok:
         raise LPError(f"LP failed: status={res.status} ({res.message})")
     return res
+
+
+# ---------------------------------------------------------------------------
+# Backend registry wiring (see repro.core.backends; the ("oef-coop", "jax")
+# primal–dual tier registers lazily from repro.core.jax_coop on first use).
+# ---------------------------------------------------------------------------
+
+backends.register_backend("efficiency-only", "lp", solve_efficiency_only,
+                          default=True)
+backends.register_backend("oef-noncoop", "lp", solve_noncoop)
+backends.register_backend("oef-noncoop", "numpy", solve_noncoop_waterfill,
+                          instance_class="piecewise-monge", fallback="lp",
+                          default=True)
+backends.register_backend("oef-noncoop", "jax", solve_noncoop_waterfill_jax,
+                          instance_class="piecewise-monge", fallback="lp")
+backends.register_backend("oef-coop", "lp", solve_coop, default=True)

@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import sys
 
+from ..core import backends
 from .scheduler import OnlineScheduler, SERVICE_POLICIES
 from .traces import (
     default_cluster,
@@ -43,10 +44,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--host-failures-per-hour", type=float, default=0.0)
     ap.add_argument("--resolve-interval", type=float, default=30.0,
                     help="re-solve throttle: min seconds between solves")
-    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
-                    help="solver tier for non-cooperative OEF re-solves "
-                         "(jax: batched jitted water-filling; LP policies "
-                         "ignore this)")
+    ap.add_argument("--backend", choices=backends.backend_names(), default=None,
+                    help="registry backend for OEF re-solves (default: each "
+                         "program's chain — numpy water-filling for "
+                         "oef-noncoop, the LP for oef-coop; jax: the jitted "
+                         "tiers incl. the coop primal-dual solver; baseline "
+                         "policies ignore this)")
     ap.add_argument("--audit-every", type=int, default=10,
                     help="fairness-property audit every Nth solve (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
@@ -91,6 +94,14 @@ def main(argv=None) -> int:
         print(f"report -> {args.out}", file=sys.stderr)
     else:
         print(text)
+    backends_used = ", ".join(
+        f"{b}={c}" for b, c in sorted(report.solver_backends.items())) or "n/a"
+    reasons = "; ".join(sorted(report.fallback_reasons)) or "none"
+    print(
+        f"solves={report.n_solves} (reused {report.n_reused_solves}) "
+        f"backends: {backends_used} | lp-fallbacks={report.fallback_count} "
+        f"({reasons})",
+        file=sys.stderr)
     return 0
 
 

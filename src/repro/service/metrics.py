@@ -3,7 +3,10 @@
 Per tenant: delivered work (slowest-device-seconds), realized throughput
 (work / membership time), job completions + JCTs, queue delays (submit ->
 first scheduled). Per re-solve: wall-clock latency, dirty-event batch size,
-whether the incremental hook reused the previous allocation. Fairness audits
+whether the incremental hook reused the previous allocation, which registry
+backend produced the answer and — when a fast tier declined the instance —
+the fallback reason (aggregated as ``fallback_count`` / ``fallback_reasons``
+in the report, so LP-fallback rates are first-class telemetry). Fairness audits
 run ``core.properties.property_report`` on the fractional allocation every
 ``audit_every``-th solve — the same checkers the offline benchmarks use, now
 as runtime telemetry.
@@ -17,6 +20,13 @@ from typing import Dict, List, Optional
 import numpy as np
 
 
+def _count(items) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for it in items:
+        out[it] = out.get(it, 0) + 1
+    return out
+
+
 @dataclasses.dataclass
 class SolveRecord:
     time: float
@@ -25,6 +35,10 @@ class SolveRecord:
     reused: bool
     dirty_events: int
     policy: str
+    #: registry backend that produced the allocation ("" for legacy callers).
+    backend: str = ""
+    #: first declined backend's reason when the chain fell through, else None.
+    fallback_reason: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -36,6 +50,9 @@ class ServiceReport:
     n_events: int
     n_solves: int
     n_reused_solves: int
+    fallback_count: int
+    fallback_reasons: Dict[str, int]
+    solver_backends: Dict[str, int]
     jobs_finished: int
     jobs_unfinished: int
     mean_jct_s: float
@@ -116,6 +133,10 @@ class MetricsCollector:
             n_events=self.n_events,
             n_solves=len(self.solves),
             n_reused_solves=sum(1 for s in self.solves if s.reused),
+            fallback_count=sum(1 for s in self.solves if s.fallback_reason),
+            fallback_reasons=_count(s.fallback_reason for s in self.solves
+                                    if s.fallback_reason),
+            solver_backends=_count(s.backend for s in self.solves if s.backend),
             jobs_finished=len(self.jcts),
             jobs_unfinished=jobs_unfinished,
             mean_jct_s=float(jct_vals.mean()) if jct_vals.size else 0.0,

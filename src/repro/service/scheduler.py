@@ -37,7 +37,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from ..core import baselines, oef, properties
+from ..core import backends, baselines, oef, properties
 from ..core.placement import JobRequest, RoundingPlacer
 from ..core.simulator import SimTenant
 from ..core.types import Allocation, ClusterSpec, JobTypeProfile, Tenant
@@ -119,13 +119,15 @@ class OnlineScheduler:
         audit_every: int = 0,
         use_weighted_oef: bool = True,
         fast_noncoop: bool = True,
-        solver_backend: str = "numpy",
+        solver_backend: Optional[str] = None,
         placer_mode: str = "auto",
     ) -> None:
         if policy not in SERVICE_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; choose from {SERVICE_POLICIES}")
-        if solver_backend not in ("numpy", "jax"):
-            raise ValueError(f"unknown solver backend {solver_backend!r}")
+        if solver_backend is not None and solver_backend not in backends.backend_names():
+            raise ValueError(
+                f"unknown solver backend {solver_backend!r}; registered: "
+                f"{backends.backend_names()}")
         self.cluster = cluster
         self.policy = policy
         self.devices_per_host = devices_per_host
@@ -519,9 +521,12 @@ class OnlineScheduler:
                               if not j.finished and j.rate > 0]
         self._n_solves += 1
         self.last_estimate = {t.name: float(e) for t, e in zip(active, est)}
+        meta = self._prev_alloc.meta if self._prev_alloc is not None else {}
         self.metrics.on_solve(SolveRecord(
             time=now, n_tenants=len(active), latency_s=solver_s, reused=reused,
-            dirty_events=dirty_batch, policy=self.policy))
+            dirty_events=dirty_batch, policy=self.policy,
+            backend=str(meta.get("backend", "")),
+            fallback_reason=meta.get("fallback_reason")))
         if self.audit_every > 0 and self._n_solves % self.audit_every == 0:
             self.metrics.on_audit(now, properties.property_report(W, ideal, m_eff))
 

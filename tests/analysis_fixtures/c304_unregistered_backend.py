@@ -1,0 +1,10 @@
+"""Fixture: exactly one C304 (register_backend with a non-audited solver)."""
+from repro.core.backends import register_backend
+from repro.core.types import Allocation
+
+
+def fixture_backend(W, m) -> Allocation:
+    return Allocation(X=W, rows=("u0",), W=W, m=m)
+
+
+register_backend("fixture-program", "numpy", fixture_backend)  # C304

@@ -36,6 +36,7 @@ FIXTURE_CASES = [
     ("c301_unaudited_solver.py", "C301"),
     ("c302_mutable_default.py", "C302"),
     ("c303_bare_assert.py", "C303"),
+    ("c304_unregistered_backend.py", "C304"),
 ]
 
 

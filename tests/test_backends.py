@@ -1,0 +1,303 @@
+"""Tests for the solver backend registry and the piecewise-Monge extension.
+
+Covers: registry lookup/defaults, the @audited_solver registration contract
+(C304's runtime counterpart), dispatch fallback chains + meta stamping, the
+deprecation shim on the legacy ``backend=`` kwarg, the staircase classifier
+(legacy class bit-identical, block-ordered extension exact vs the LP, the
+known counterexample still outside), and the service fallback telemetry.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import backends, oef
+from repro.core.backends import BackendError
+from repro.core.types import Allocation
+from repro.service.metrics import MetricsCollector, SolveRecord
+
+# The comparative-advantage counterexample: rows are not elementwise ordered
+# AND the consecutive ratio rows decrease in the type index, so neither
+# staircase class contains it — the greedy would be suboptimal (see
+# classify_staircase) and the LP must answer.
+W_COUNTER = np.array([[1.0, 1.5, 2.5], [1.0, 2.0, 3.0]])
+M3 = np.array([2.0, 1.0, 1.0])
+
+
+def rand_piecewise(rng, n, k=3):
+    """Block-ordered (piecewise-Monge) instance that is generally NOT in the
+    legacy consistently-ordered class: geometric rows a_u * b_u**j with b
+    sorted but amplitudes a shuffled, so elementwise domination fails."""
+    b = np.sort(1.0 + rng.uniform(0.05, 1.0, size=n))
+    a = rng.uniform(0.5, 2.0, size=n)
+    return a[:, None] * (b[:, None] ** np.arange(k)[None, :])
+
+
+def rand_monge(rng, n, k=3):
+    """Consistently ordered: common geometric row scaled by sorted amplitudes
+    (ratio rows are constant in j, rows elementwise ordered)."""
+    base = np.cumprod(1.0 + rng.uniform(0.05, 1.0, size=k))
+    scales = np.sort(rng.uniform(0.5, 2.0, size=n))
+    return scales[:, None] * base[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Registry basics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_programs_and_defaults():
+    progs = backends.programs()
+    for p in ("efficiency-only", "oef-noncoop", "oef-coop", "max-min",
+              "gavel", "gandiva-fair"):
+        assert p in progs
+    assert backends.backends_for("oef-noncoop") == ["jax", "lp", "numpy"]
+    assert backends.backends_for("oef-coop") == ["jax", "lp"]
+    assert backends.default_backend("oef-noncoop") == "numpy"
+    assert backends.default_backend("oef-coop") == "lp"
+    assert set(backends.backend_names()) >= {"numpy", "jax", "lp"}
+
+
+def test_resolve_unknown_raises():
+    with pytest.raises(ValueError, match="unknown program"):
+        backends.default_backend("no-such-program")
+    with pytest.raises(ValueError, match="no backend"):
+        backends.resolve_backend("oef-noncoop", "fortran")
+
+
+def test_register_rejects_unaudited_solver():
+    def not_audited(W, m) -> Allocation:  # pragma: no cover - never called
+        raise NotImplementedError
+
+    with pytest.raises(ValueError, match="C304"):
+        backends.register_backend("oef-noncoop", "bogus", not_audited)
+    assert ("oef-noncoop", "bogus") not in backends._REGISTRY
+
+
+def test_registered_specs_declare_kwargs():
+    spec = backends.resolve_backend("oef-noncoop", "numpy")
+    assert "tau_hint" in spec.accepts and "iters" in spec.accepts
+    assert spec.instance_class == "piecewise-monge"
+    assert spec.fallback == "lp"
+    lp = backends.resolve_backend("oef-noncoop", "lp")
+    assert "method" in lp.accepts and lp.fallback is None
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: chain walking + meta stamping
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_stamps_backend_on_direct_hit():
+    rng = np.random.default_rng(0)
+    W = rand_monge(rng, 5)
+    alloc = backends.dispatch("oef-noncoop", W, M3 * 2)
+    assert alloc.meta["backend"] == "numpy"
+    assert "fallback_from" not in alloc.meta
+
+
+def test_dispatch_falls_back_to_lp_and_records_reason():
+    alloc = backends.dispatch("oef-noncoop", W_COUNTER, M3)
+    assert alloc.meta["backend"] == "lp"
+    assert alloc.meta["fallback_from"] == "numpy"
+    assert "staircase" in alloc.meta["fallback_reason"]
+    lp = oef.solve_noncoop(W_COUNTER, M3)
+    assert np.isclose((W_COUNTER * alloc.X).sum(), (W_COUNTER * lp.X).sum())
+
+
+def test_dispatch_filters_kwargs_per_backend():
+    # tau_hint is a water-filling knob the LP does not accept; the chain must
+    # still fall through without a TypeError.
+    alloc = backends.dispatch("oef-noncoop", W_COUNTER, M3, tau_hint=0.5)
+    assert alloc.meta["backend"] == "lp"
+
+
+def test_dispatch_chain_exhausted_raises():
+    # A solver that always declines, with no fallback, must surface the chain.
+    from repro.core.properties import audited_solver
+
+    @audited_solver
+    def always_declines(W, m) -> Allocation:
+        raise BackendError("nope")
+
+    backends.register_backend("test-prog-exhaust", "numpy", always_declines)
+    try:
+        with pytest.raises(BackendError, match="every backend in the chain"):
+            backends.dispatch("test-prog-exhaust", W_COUNTER, M3)
+    finally:
+        backends._REGISTRY.pop(("test-prog-exhaust", "numpy"))
+        backends._DEFAULT.pop("test-prog-exhaust")
+
+
+def test_baseline_programs_dispatch():
+    rng = np.random.default_rng(1)
+    W = rng.uniform(1.0, 3.0, size=(4, 3))
+    alloc = backends.dispatch("max-min", W, M3 * 4)
+    assert alloc.meta["backend"] == "numpy"
+    alloc = backends.dispatch("gavel", W, M3 * 4)
+    assert alloc.meta["backend"] == "lp"
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_backend_kwarg_warns_once(monkeypatch):
+    monkeypatch.setattr(oef, "_BACKEND_KWARG_WARNED", False)
+    rng = np.random.default_rng(2)
+    W = rand_monge(rng, 4)
+    with pytest.warns(DeprecationWarning, match="backend=.*deprecated"):
+        a1 = oef.solve_noncoop_fast(W, M3 * 2, backend="numpy")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a second warning would raise
+        a2 = oef.solve_noncoop_fast(W, M3 * 2, backend="numpy")
+    assert np.allclose(a1.X, a2.X)
+    assert a1.meta["backend"] == "numpy" and a1.meta["fast_path"] is True
+
+
+def test_backend_kwarg_none_does_not_warn(monkeypatch):
+    monkeypatch.setattr(oef, "_BACKEND_KWARG_WARNED", False)
+    rng = np.random.default_rng(3)
+    W = rand_monge(rng, 4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        alloc = oef.solve_noncoop_fast(W, M3 * 2)
+    assert alloc.meta["backend"] == "numpy"
+
+
+# ---------------------------------------------------------------------------
+# Staircase classifier: legacy class unchanged, piecewise extension exact
+# ---------------------------------------------------------------------------
+
+
+def test_classifier_legacy_monge_bit_identical():
+    rng = np.random.default_rng(4)
+    for _ in range(20):
+        W = rand_monge(rng, int(rng.integers(2, 12)), int(rng.integers(2, 5)))
+        cls = oef.classify_staircase(W)
+        assert cls is not None
+        klass, order, Ws = cls
+        assert klass == "monge"
+        legacy = np.argsort(W[:, -1], kind="stable")
+        assert np.array_equal(order, legacy)
+        assert np.array_equal(Ws, W[legacy])
+
+
+def test_classifier_counterexample_stays_outside():
+    assert oef.classify_staircase(W_COUNTER) is None
+    with pytest.raises(BackendError):
+        oef.solve_noncoop_waterfill(W_COUNTER, M3)
+    alloc = oef.solve_noncoop_fast(W_COUNTER, M3)
+    assert alloc.meta["backend"] == "lp" and alloc.meta["fast_path"] is False
+
+
+def test_piecewise_class_recognized_and_exact_numpy():
+    rng = np.random.default_rng(5)
+    n_ext = 0
+    for _ in range(25):
+        n, k = int(rng.integers(2, 16)), int(rng.integers(2, 5))
+        W = rand_piecewise(rng, n, k)
+        m = rng.uniform(1.0, 4.0, size=k) * n / 4
+        cls = oef.classify_staircase(W)
+        assert cls is not None, "generator must stay inside the class"
+        if cls[0] == "piecewise-monge":
+            n_ext += 1
+        alloc = oef.solve_noncoop_waterfill(W, m)
+        lp = oef.solve_noncoop(W, m)
+        o_g, o_lp = (W * alloc.X).sum(), (W * lp.X).sum()
+        assert abs(o_g - o_lp) <= 1e-7 * max(abs(o_lp), 1.0)
+        tp = np.einsum("lk,lk->l", W, alloc.X)
+        assert np.ptp(tp) <= 1e-6 * max(tp.max(), 1.0)  # equal throughput
+        assert np.all((alloc.X.sum(axis=0) - m) <= 1e-9 * max(m.max(), 1.0))
+    assert n_ext > 0, "suite never exercised the extension class"
+
+
+def test_piecewise_fallback_rate_below_10_percent():
+    # Acceptance gate: on the seeded block-ordered suite the non-coop LP
+    # fallback rate must be < 10% (it is exactly 0 for this generator).
+    rng = np.random.default_rng(6)
+    falls = 0
+    trials = 50
+    for _ in range(trials):
+        n = int(rng.integers(2, 20))
+        W = rand_piecewise(rng, n)
+        m = rng.uniform(1.0, 4.0, size=3) * n / 4
+        alloc = backends.dispatch("oef-noncoop", W, m)
+        falls += alloc.meta["backend"] == "lp"
+    assert falls / trials < 0.10
+
+
+def test_piecewise_parity_jax():
+    jax = pytest.importorskip("jax")
+    del jax
+    rng = np.random.default_rng(7)
+    for n in (4, 9, 16):
+        W = rand_piecewise(rng, n)
+        m = rng.uniform(1.0, 4.0, size=3) * n / 4
+        a_np = oef.solve_noncoop_waterfill(W, m)
+        a_jx = oef.solve_noncoop_waterfill_jax(W, m)
+        assert a_jx.meta["instance_class"] == a_np.meta["instance_class"]
+        assert abs(a_jx.meta["tau"] - a_np.meta["tau"]) <= 1e-9 * max(
+            a_np.meta["tau"], 1.0)
+        assert abs((W * a_jx.X).sum() - (W * a_np.X).sum()) <= 1e-7 * max(
+            (W * a_np.X).sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# solve_incremental / evaluate_tenants route through the registry
+# ---------------------------------------------------------------------------
+
+
+def test_solve_incremental_noncoop_stamps_meta():
+    rng = np.random.default_rng(8)
+    W = rand_piecewise(rng, 6)
+    m = np.array([3.0, 2.0, 2.0])
+    alloc = oef.solve_incremental(W, m, policy="oef-noncoop")
+    assert alloc.meta["backend"] == "numpy" and alloc.meta["fast_path"]
+    warm = oef.solve_incremental(W, m * 1.1, policy="oef-noncoop", prev=alloc)
+    assert warm.meta["warm_started"] is True
+
+
+def test_solve_incremental_coop_numpy_aliases_lp():
+    rng = np.random.default_rng(9)
+    W = rng.uniform(1.0, 3.0, size=(3, 3))
+    m = np.array([2.0, 2.0, 2.0])
+    alloc = oef.solve_incremental(W, m, policy="oef-coop", backend="numpy")
+    assert alloc.meta["backend"] == "lp"
+
+
+# ---------------------------------------------------------------------------
+# Service telemetry: fallback counters
+# ---------------------------------------------------------------------------
+
+
+def _rec(t, backend="", reason=None):
+    return SolveRecord(time=t, n_tenants=2, latency_s=1e-3, reused=False,
+                       dirty_events=1, policy="oef-noncoop", backend=backend,
+                       fallback_reason=reason)
+
+
+def test_metrics_fallback_counters():
+    mc = MetricsCollector()
+    mc.on_solve(_rec(0.0, backend="numpy"))
+    mc.on_solve(_rec(1.0, backend="lp", reason="off-class"))
+    mc.on_solve(_rec(2.0, backend="lp", reason="off-class"))
+    mc.on_solve(_rec(3.0, backend="jax"))
+    rep = mc.report(policy="oef-noncoop", horizon_s=10.0, jobs_unfinished=0,
+                    steady_state_estimate={})
+    assert rep.fallback_count == 2
+    assert rep.fallback_reasons == {"off-class": 2}
+    assert rep.solver_backends == {"numpy": 1, "lp": 2, "jax": 1}
+    assert '"fallback_count": 2' in rep.to_json()
+
+
+def test_scheduler_rejects_unregistered_backend():
+    from repro.service.scheduler import OnlineScheduler
+    from repro.service.traces import default_cluster
+
+    with pytest.raises(ValueError, match="unknown solver backend"):
+        OnlineScheduler(default_cluster("paper"), "oef-coop",
+                        solver_backend="fortran")
