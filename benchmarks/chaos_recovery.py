@@ -1,0 +1,161 @@
+"""Chaos + crash-recovery benchmark: throughput retained under the standard
+seeded fault storm, and journal recovery latency.
+
+Three legs over the same seeded base trace (6 tenants, 1 h horizon, 2/h
+background host churn on the paper cluster):
+
+  - **clean** — no injected faults (background churn only); the fault-free
+    throughput baseline.
+  - **chaos** — the full :func:`repro.service.faults.standard_plan` storm:
+    correlated same-timestamp host-failure bursts, corrupt profile updates
+    (quarantine cycles), and solver faults at every guardrail rung
+    (transient / timeout / crash) via the registered ``"chaos"`` wrapper
+    backend. Gate: the run completes with zero unhandled exceptions and
+    retains >= 70% of the clean delivered work.
+  - **kill+resume** — a journaled run killed at its midpoint event, then
+    recovered with :func:`repro.service.journal.resume_scheduler`. Gate: the
+    resumed final report is bit-identical to an uninterrupted journaled run
+    (wall-clock latency fields excluded). Reported: snapshot-load latency and
+    total resume wall time. This leg injects trace-level chaos only (storms +
+    corrupt profiles): solver-fault injection is in-process state and dies
+    with the killed process, exactly like a real crashed solver library.
+
+Dumps raw numbers to ``BENCH_chaos.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gc
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from repro.service import OnlineScheduler, synthetic_trace
+from repro.service.faults import ChaosEngine, FaultPlan, standard_plan
+from repro.service.journal import Journal, recover_scheduler
+from repro.service.traces import default_cluster
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_chaos.json")
+
+RETENTION_FLOOR = 0.70
+SNAPSHOT_EVERY = 10
+
+
+def _view(report) -> str:
+    d = dataclasses.asdict(report)
+    d.pop("resolve_latency_ms_mean")
+    d.pop("resolve_latency_ms_p95")
+    return repr(d)  # repr: NaN-tolerant equality
+
+
+def _delivered(report) -> float:
+    return sum(report.tenant_delivered_work.values())
+
+
+def _sched(cluster) -> OnlineScheduler:
+    return OnlineScheduler(cluster, "oef-coop", solver_max_retries=1)
+
+
+def run() -> list:
+    cluster = default_cluster("paper")
+    base = synthetic_trace(6, cluster=cluster, duration_s=3600.0,
+                           host_failures_per_hour=2.0, seed=3)
+    gc.collect()
+    gc.freeze()
+    rows, dump = [], {}
+
+    # -- leg 1: clean baseline ---------------------------------------------
+    t0 = time.perf_counter()
+    rep_clean = _sched(cluster).run(list(base))
+    wall_clean = time.perf_counter() - t0
+    clean_tp = _delivered(rep_clean)
+    rows.append(("chaos/clean_replay", wall_clean * 1e6,
+                 f"{rep_clean.n_solves} solves {rep_clean.jobs_finished} jobs"))
+
+    # -- leg 2: standard fault storm ---------------------------------------
+    engine = ChaosEngine(standard_plan(seed=7), cluster)
+    storm_trace = engine.chaos_trace(base)
+    sched = _sched(cluster)
+    t0 = time.perf_counter()
+    with engine.installed():
+        rep_chaos = sched.run(list(storm_trace))  # zero-exception gate
+    wall_chaos = time.perf_counter() - t0
+    retained = _delivered(rep_chaos) / max(clean_tp, 1e-9)
+    summary = engine.summary()
+    rows.append(("chaos/storm_replay", wall_chaos * 1e6,
+                 f"retained={retained:.1%} degraded={rep_chaos.degraded_solves} "
+                 f"faults={summary['solver_faults_fired']} "
+                 f"quarantines={sum(1 for e in rep_chaos.quarantine_events if e['action'] == 'quarantine')}"))
+    if retained < RETENTION_FLOOR:
+        raise RuntimeError(
+            f"chaos retention gate: {retained:.1%} < {RETENTION_FLOOR:.0%} "
+            f"of fault-free throughput")
+
+    # -- leg 3: journaled kill + resume ------------------------------------
+    plan = FaultPlan(seed=7, storms=3, storm_size=3, corrupt_profiles=3,
+                     solver_faults=())
+    jtrace = ChaosEngine(plan, cluster).chaos_trace(base)
+    workdir = tempfile.mkdtemp(prefix="chaos_recovery_")
+    try:
+        ref_dir = os.path.join(workdir, "ref")
+        journal = Journal(ref_dir, snapshot_every=SNAPSHOT_EVERY)
+        rep_ref = _sched(cluster).run(list(jtrace), journal=journal)
+        journal.close()
+
+        crash_dir = os.path.join(workdir, "crash")
+        times = sorted(e.time for e in jtrace)
+        mid = times[len(times) // 2]
+        journal = Journal(crash_dir, snapshot_every=SNAPSHOT_EVERY)
+        _sched(cluster).run(list(jtrace), until=mid, journal=journal)
+        journal.close()  # the "kill": process state is gone, disk survives
+
+        t0 = time.perf_counter()
+        sched2, journal2, n_applied = recover_scheduler(
+            crash_dir, snapshot_every=SNAPSHOT_EVERY)
+        snapshot_load_s = time.perf_counter() - t0
+        tail = journal2.events(journal2.n_applied)
+        t0 = time.perf_counter()
+        rep_res = sched2.run(list(tail) + list(jtrace)[n_applied:],
+                             journal=journal2)
+        resume_wall_s = time.perf_counter() - t0
+        journal2.close()
+        bit_exact = _view(rep_ref) == _view(rep_res)
+        if not bit_exact:
+            raise RuntimeError("kill+resume report diverged from the "
+                               "uninterrupted journaled run")
+        rows.append(("chaos/snapshot_load", snapshot_load_s * 1e6,
+                     f"{len(journal2.available_snapshots())} snapshots "
+                     f"{n_applied} events journaled"))
+        rows.append(("chaos/resume_replay", resume_wall_s * 1e6,
+                     f"bit_exact={bit_exact} tail={len(tail)} events"))
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    dump.update({
+        "clean": {"wall_s": wall_clean, "delivered": clean_tp,
+                  "n_solves": rep_clean.n_solves,
+                  "jobs_finished": rep_clean.jobs_finished},
+        "storm": {"wall_s": wall_chaos, "delivered": _delivered(rep_chaos),
+                  "throughput_retained": retained,
+                  "degraded_solves": rep_chaos.degraded_solves,
+                  "quarantine_events": len(rep_chaos.quarantine_events),
+                  "anomalies": rep_chaos.anomalies,
+                  "solver_backends": rep_chaos.solver_backends,
+                  "chaos_summary": summary},
+        "recovery": {"snapshot_load_s": snapshot_load_s,
+                     "resume_wall_s": resume_wall_s,
+                     "events_journaled": n_applied,
+                     "bit_exact": bit_exact},
+        "gates": {"retention_floor": RETENTION_FLOOR,
+                  "retained": retained, "bit_exact": bit_exact},
+    })
+    with open(BENCH_PATH, "w") as f:
+        json.dump(dump, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -28,6 +28,7 @@ MODULES = [
     "fig10b_sensitivity",
     "extensions",
     "service_throughput",
+    "chaos_recovery",
 ]
 
 

@@ -28,4 +28,8 @@ assert r["n_solves"] > 0 and r["jobs_finished"] > 0, r
 print(f"smoke ok: {r['n_solves']} solves, {r['jobs_finished']} jobs finished, "
       f"{r['n_reused_solves']} reused, mean resolve {r['resolve_latency_ms_mean']:.2f} ms")
 EOF
+
+echo "== chaos smoke: fault storm + bit-exact journal recovery (~5s) =="
+python scripts/smoke_chaos.py
+
 echo "== all checks passed =="

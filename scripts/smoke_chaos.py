@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""CI smoke for the chaos harness + crash-safe control plane.
+
+Three fast gates (a few seconds total), mirroring the acceptance criteria of
+the robustness layer (see docs/robustness.md):
+
+  1. **zero unhandled exceptions** — the standard seeded fault storm
+     (correlated host bursts, corrupt profiles, solver faults at every
+     guardrail rung) replays to completion through ``OnlineScheduler`` with
+     guardrails on; every injected solver fault must have fired.
+  2. **throughput retention** — the storm run retains >= 70% of the
+     fault-free delivered work on the same base trace.
+  3. **bit-exact journal recovery** — a journaled run killed at its midpoint
+     event resumes via ``resume_scheduler`` to a final report bit-identical
+     to the uninterrupted run (wall-clock latency fields excluded; repr
+     comparison because NaN != NaN).
+
+Usage: PYTHONPATH=src python scripts/smoke_chaos.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import sys
+import tempfile
+
+from repro.service import OnlineScheduler, synthetic_trace
+from repro.service.faults import ChaosEngine, FaultPlan, standard_plan
+from repro.service.journal import Journal, resume_scheduler
+from repro.service.traces import default_cluster
+
+RETENTION_FLOOR = 0.70
+
+
+def _view(report) -> str:
+    d = dataclasses.asdict(report)
+    d.pop("resolve_latency_ms_mean")
+    d.pop("resolve_latency_ms_p95")
+    return repr(d)
+
+
+def _sched(cluster) -> OnlineScheduler:
+    return OnlineScheduler(cluster, "oef-coop", solver_max_retries=1)
+
+
+def main() -> int:
+    cluster = default_cluster("paper")
+    base = synthetic_trace(6, cluster=cluster, duration_s=3600.0,
+                           host_failures_per_hour=2.0, seed=3)
+
+    # gate 1+2: the standard storm completes and retains throughput
+    rep_clean = _sched(cluster).run(list(base))
+    clean_tp = sum(rep_clean.tenant_delivered_work.values())
+    engine = ChaosEngine(standard_plan(seed=7), cluster)
+    storm = engine.chaos_trace(base)
+    sched = _sched(cluster)
+    with engine.installed():
+        rep_storm = sched.run(list(storm))  # any raise fails the smoke
+    fired = engine.summary()["solver_faults_fired"]
+    planned = len(standard_plan(seed=7).solver_faults)
+    if fired != planned:
+        print(f"FAIL: {fired}/{planned} planned solver faults fired", file=sys.stderr)
+        return 1
+    retained = sum(rep_storm.tenant_delivered_work.values()) / max(clean_tp, 1e-9)
+    if retained < RETENTION_FLOOR:
+        print(f"FAIL: throughput retained {retained:.1%} < {RETENTION_FLOOR:.0%}",
+              file=sys.stderr)
+        return 1
+    quarantines = sum(1 for e in rep_storm.quarantine_events
+                      if e["action"] == "quarantine")
+    print(f"storm ok: {rep_storm.n_events} events, {rep_storm.n_solves} solves, "
+          f"{rep_storm.degraded_solves} degraded, {quarantines} quarantines, "
+          f"retained {retained:.1%}")
+
+    # gate 3: kill at the midpoint event, resume bit-exact (trace-level chaos:
+    # solver-fault injection is process state and dies with the process)
+    plan = FaultPlan(seed=7, storms=3, storm_size=3, corrupt_profiles=3,
+                     solver_faults=())
+    jtrace = ChaosEngine(plan, cluster).chaos_trace(base)
+    workdir = tempfile.mkdtemp(prefix="smoke_chaos_")
+    try:
+        ref_dir = os.path.join(workdir, "ref")
+        journal = Journal(ref_dir, snapshot_every=10)
+        rep_ref = _sched(cluster).run(list(jtrace), journal=journal)
+        journal.close()
+
+        crash_dir = os.path.join(workdir, "crash")
+        times = sorted(e.time for e in jtrace)
+        journal = Journal(crash_dir, snapshot_every=10)
+        _sched(cluster).run(list(jtrace), until=times[len(times) // 2],
+                            journal=journal)
+        journal.close()
+        rep_res = resume_scheduler(crash_dir, list(jtrace), snapshot_every=10)
+        if _view(rep_ref) != _view(rep_res):
+            print("FAIL: resumed report diverged from uninterrupted run",
+                  file=sys.stderr)
+            return 1
+        n_recs = len(Journal(crash_dir, snapshot_every=10).events())
+        print(f"recovery ok: {n_recs} journaled events replayed bit-exact")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

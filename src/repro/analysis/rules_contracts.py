@@ -203,6 +203,62 @@ class UnregisteredBackendSolver(Rule):
         return None
 
 
+_BROAD_EXC = {"Exception", "BaseException"}
+
+
+class SwallowedException(Rule):
+    rule_id = "C305"
+    title = "exception swallowed silently in control-plane code"
+    rationale = (
+        "The robustness layer guarantees every fault either surfaces in "
+        "telemetry (anomaly counters, degraded stamps, quarantine log) or "
+        "escalates the degradation ladder; an `except Exception: pass` (or a "
+        "bare `except:`) hides faults from both routes and turns a solver or "
+        "control-plane bug into silent misallocation. Catch the narrowest "
+        "type and record the failure, or re-raise."
+    )
+    scope = ("repro/service/", "repro/core/")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                findings.append(ctx.finding(
+                    node, self.rule_id,
+                    "bare `except:` also catches SystemExit/KeyboardInterrupt "
+                    "and hides the fault; catch a specific exception type",
+                ))
+                continue
+            if self._is_broad(node.type) and self._is_silent(node.body):
+                findings.append(ctx.finding(
+                    node, self.rule_id,
+                    "`except Exception` with a pass-only body swallows faults "
+                    "silently; record the failure (metrics / anomaly counter) "
+                    "or re-raise",
+                ))
+        return findings
+
+    @staticmethod
+    def _is_broad(type_node: ast.AST) -> bool:
+        if isinstance(type_node, ast.Tuple):
+            return any(terminal_name(e) in _BROAD_EXC for e in type_node.elts)
+        return terminal_name(type_node) in _BROAD_EXC
+
+    @staticmethod
+    def _is_silent(body: List[ast.stmt]) -> bool:
+        for stmt in body:
+            if isinstance(stmt, ast.Pass):
+                continue
+            if (isinstance(stmt, ast.Expr)
+                    and isinstance(stmt.value, ast.Constant)
+                    and stmt.value.value is Ellipsis):
+                continue
+            return False
+        return True
+
+
 def rules() -> List[Rule]:
     return [UnauditedSolver(), MutableDefaultArg(), BareAssert(),
-            UnregisteredBackendSolver()]
+            UnregisteredBackendSolver(), SwallowedException()]

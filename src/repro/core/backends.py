@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import inspect
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .types import Allocation
@@ -38,7 +39,27 @@ class BackendError(RuntimeError):
     Raising this from a registered solver is the fallback protocol:
     :func:`dispatch` catches it and retries on the backend's declared
     fallback. Anything else (bad input, missing dependency) should raise
-    ``ValueError`` / ``RuntimeError`` as usual and will propagate.
+    ``ValueError`` / ``RuntimeError`` as usual and will propagate — unless
+    the caller opted into ``dispatch(..., failsafe=True)``, which converts
+    unexpected exceptions into declines so the chain keeps walking.
+
+    ``transient=True`` marks an error worth retrying on the *same* backend
+    (a numerical blip, an injected chaos fault) before falling through;
+    :func:`dispatch` honours it when ``max_retries > 0``.
+    """
+
+    def __init__(self, message: str = "", *, transient: bool = False) -> None:
+        super().__init__(message)
+        self.transient = transient
+
+
+class SolveTimeout(BackendError):
+    """A solve exceeded its wall-clock budget (or a chaos-injected one).
+
+    Subclasses :class:`BackendError` so the fallback chain handles it, but
+    dispatch additionally stamps ``meta["degraded"]`` on the answer that a
+    lower tier eventually produced: a timeout is a guardrail event, not a
+    routine off-class decline.
     """
 
 
@@ -61,6 +82,14 @@ class BackendSpec:
 
 _REGISTRY: Dict[Tuple[str, str], BackendSpec] = {}
 _DEFAULT: Dict[str, str] = {}
+
+#: dispatch-level fault-injection / observation hooks. Each hook is called
+#: as ``hook(program, backend, W, m)`` immediately before every solve
+#: attempt; a hook that raises :class:`BackendError` (or a subclass) makes
+#: that attempt decline exactly as if the solver itself had, so the chaos
+#: harness (``repro.service.faults``) can inject deterministic faults without
+#: monkey-patching any solver.
+_DISPATCH_HOOKS: List[Callable[[str, str, object, object], None]] = []
 
 #: providers that register on import — keeps jax strictly optional until a
 #: caller actually asks for a jax tier.
@@ -102,6 +131,39 @@ def register_backend(
     if default or program not in _DEFAULT:
         _DEFAULT[program] = backend
     return solver
+
+
+def unregister_backend(program: str, backend: str,
+                       *, new_default: Optional[str] = None) -> None:
+    """Remove a registered implementation (chaos-harness teardown).
+
+    When the removed backend was the program's default, ``new_default`` (or
+    any surviving backend, sorted-first) takes over so the program never
+    loses its chain.
+    """
+    _REGISTRY.pop((program, backend), None)
+    if _DEFAULT.get(program) == backend:
+        if new_default is not None:
+            _DEFAULT[program] = new_default
+        else:
+            survivors = backends_for(program)
+            if survivors:
+                _DEFAULT[program] = survivors[0]
+            else:
+                _DEFAULT.pop(program, None)
+
+
+def add_dispatch_hook(hook: Callable[[str, str, object, object], None]) -> None:
+    """Install a pre-attempt dispatch hook (see ``_DISPATCH_HOOKS``)."""
+    _DISPATCH_HOOKS.append(hook)
+
+
+def remove_dispatch_hook(hook: Callable[[str, str, object, object], None]) -> None:
+    """Remove a previously installed dispatch hook (no-op when absent)."""
+    try:
+        _DISPATCH_HOOKS.remove(hook)
+    except ValueError:
+        pass
 
 
 def resolve_backend(program: str, backend: Optional[str] = None) -> BackendSpec:
@@ -151,7 +213,8 @@ def backend_names() -> List[str]:
 
 
 def dispatch(program: str, W, m, *, backend: Optional[str] = None,
-             **kwargs) -> Allocation:
+             max_retries: int = 0, time_budget_s: Optional[float] = None,
+             failsafe: bool = False, **kwargs) -> Allocation:
     """Solve ``program`` on ``(W, m)`` via the backend chain.
 
     Starts at ``backend`` (or the program default) and walks declared
@@ -160,27 +223,83 @@ def dispatch(program: str, W, m, *, backend: Optional[str] = None,
     (``tau_hint=`` for the water-filling tiers, ``method=`` for the LPs,
     ``prev_state=`` for the coop primal–dual tier, ...).
 
+    Guardrails (the solver escalation ladder the online service relies on):
+
+    - ``max_retries`` — a :class:`BackendError` flagged ``transient`` is
+      retried on the *same* backend up to this many times before falling
+      through. Retries are immediate and deterministic: the control plane
+      runs in virtual time, so the re-solve throttle is the backoff — a wall
+      sleep here would only add decision latency. The retry count lands in
+      ``meta["retries"]``.
+    - ``time_budget_s`` — per-attempt wall-clock budget, checked after the
+      attempt (Python solves cannot be preempted). An over-budget answer is
+      discarded and the chain falls through as on :class:`SolveTimeout`.
+      Wall-clock dependent, hence opt-in and off in deterministic replays;
+      chaos runs inject *virtual* timeouts through hooks instead.
+    - ``failsafe`` — any non-``BackendError`` exception from a backend is
+      converted into a decline so the chain keeps walking (jax tier crash ->
+      LP). Only the chain running dry still raises, and then always as
+      :class:`BackendError`, so callers have a single exception to floor on.
+
     The returned allocation's ``meta`` is stamped here — the single place
     backend attribution lives: ``meta["backend"]`` is the tier that actually
-    produced the answer, and after a fallback ``meta["fallback_from"]`` /
-    ``meta["fallback_reason"]`` describe the first declined attempt.
+    produced the answer; after a fallback ``meta["fallback_from"]`` /
+    ``meta["fallback_reason"]`` describe the first declined attempt, and
+    ``meta["degraded"]`` is set when a *guardrail* engaged (timeout,
+    unexpected exception, or a transient error that exhausted its retries) —
+    routine off-class declines do not count as degradation.
     """
     spec = resolve_backend(program, backend)
     attempts: List[Tuple[str, str]] = []
+    retries_left = max_retries
+    total_retries = 0
+    degraded = False
     while True:
         try:
+            for hook in list(_DISPATCH_HOOKS):
+                hook(program, spec.backend, W, m)
+            t0 = time.perf_counter()
             alloc = spec.solver(
                 W, m, **{k: v for k, v in kwargs.items() if k in spec.accepts})
+            if time_budget_s is not None:
+                elapsed = time.perf_counter() - t0
+                if elapsed > time_budget_s:
+                    raise SolveTimeout(
+                        f"backend {spec.backend!r} took {elapsed:.3f}s "
+                        f"(budget {time_budget_s:.3f}s)")
         except BackendError as e:
+            if e.transient and retries_left > 0:
+                retries_left -= 1
+                total_retries += 1
+                continue
+            if isinstance(e, SolveTimeout) or (e.transient and max_retries > 0):
+                degraded = True  # guardrail event, not a routine decline
             attempts.append((spec.backend, str(e)))
             if spec.fallback is None:
                 raise BackendError(
                     f"program {program!r}: every backend in the chain "
                     f"declined: {attempts}") from e
             spec = resolve_backend(program, spec.fallback)
+            retries_left = max_retries
+            continue
+        except Exception as e:  # repro guardrail: escalate instead of raising
+            if not failsafe:
+                raise
+            degraded = True
+            attempts.append((spec.backend, f"{type(e).__name__}: {e}"))
+            if spec.fallback is None:
+                raise BackendError(
+                    f"program {program!r}: every backend in the chain "
+                    f"failed: {attempts}") from e
+            spec = resolve_backend(program, spec.fallback)
+            retries_left = max_retries
             continue
         alloc.meta["backend"] = spec.backend
         if attempts:
             alloc.meta["fallback_from"] = attempts[0][0]
             alloc.meta["fallback_reason"] = attempts[0][1]
+        if total_retries:
+            alloc.meta["retries"] = total_retries
+        if degraded:
+            alloc.meta["degraded"] = True
         return alloc

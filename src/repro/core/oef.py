@@ -355,6 +355,9 @@ def solve_incremental(
     method: str = "highs",
     fast: bool = True,
     backend: Optional[str] = None,
+    failsafe: bool = False,
+    max_retries: int = 0,
+    time_budget_s: Optional[float] = None,
 ) -> Allocation:
     """Warm-started re-solve of an OEF program for the online service.
 
@@ -369,6 +372,12 @@ def solve_incremental(
     numpy water-filling for ``oef-noncoop``, the LP for ``oef-coop``). For
     ``oef-coop``, ``"numpy"`` is accepted as an alias of the LP default so a
     service configured with one backend can run every policy.
+
+    ``failsafe`` and ``max_retries`` are forwarded to
+    :func:`repro.core.backends.dispatch` — the online scheduler sets both so
+    a crashing tier escalates down the ladder instead of raising into the
+    event loop, and transient declines get deterministic same-backend
+    retries.
     """
     if allocation_reusable(prev, W, m, policy=_POLICY_META.get(policy, policy)):
         return mark_reused(prev)
@@ -377,7 +386,9 @@ def solve_incremental(
         if fast:
             alloc = backends.dispatch(
                 "oef-noncoop", W, m, backend=backend, iters=80,
-                tau_hint=hint if isinstance(hint, float) else None)
+                tau_hint=hint if isinstance(hint, float) else None,
+                failsafe=failsafe, max_retries=max_retries,
+                time_budget_s=time_budget_s)
             alloc.meta.setdefault("fast_path", alloc.meta.get("backend") != "lp")
             return alloc
         return solve_noncoop(W, m, method=method)
@@ -385,9 +396,13 @@ def solve_incremental(
         prev_state = prev.meta.get("pd_state") if prev is not None else None
         return backends.dispatch(
             "oef-coop", W, m, backend=None if backend == "numpy" else backend,
-            method=method, prev_state=prev_state)
+            method=method, prev_state=prev_state,
+            failsafe=failsafe, max_retries=max_retries,
+                time_budget_s=time_budget_s)
     if policy == "efficiency-only":
-        return backends.dispatch("efficiency-only", W, m, method=method)
+        return backends.dispatch("efficiency-only", W, m, method=method,
+                                 failsafe=failsafe, max_retries=max_retries,
+                time_budget_s=time_budget_s)
     raise ValueError(f"unknown OEF policy: {policy}")
 
 
@@ -533,6 +548,9 @@ def evaluate_tenants(
     fast: bool = False,
     prev: Optional[Allocation] = None,
     backend: Optional[str] = None,
+    failsafe: bool = False,
+    max_retries: int = 0,
+    time_budget_s: Optional[float] = None,
 ) -> TenantAllocation:
     """Tenant-level fair-share evaluation with weights and multi-job types.
 
@@ -541,23 +559,31 @@ def evaluate_tenants(
     the expanded virtual-user instance is unchanged the old allocation is
     reused outright, otherwise it seeds the warm start. ``backend`` names a
     registry backend chain (see :mod:`repro.core.backends`); None picks each
-    program's default.
+    program's default. ``failsafe`` / ``max_retries`` forward to
+    :func:`repro.core.backends.dispatch` (solver guardrails for the online
+    service).
     """
     W_virt, row_map, replication = expand_virtual_users(tenants, cluster.k)
     m = cluster.m_vec
     if prev is not None:
         alloc = solve_incremental(W_virt, m, policy=mode, prev=prev, method=method,
-                                  fast=fast, backend=backend)
+                                  fast=fast, backend=backend,
+                                  failsafe=failsafe, max_retries=max_retries,
+                time_budget_s=time_budget_s)
     elif mode == "noncooperative":
         if fast:
-            alloc = backends.dispatch("oef-noncoop", W_virt, m, backend=backend)
+            alloc = backends.dispatch("oef-noncoop", W_virt, m, backend=backend,
+                                      failsafe=failsafe, max_retries=max_retries,
+                time_budget_s=time_budget_s)
             alloc.meta.setdefault("fast_path", alloc.meta.get("backend") != "lp")
         else:
             alloc = solve_noncoop(W_virt, m, method=method)
     elif mode == "cooperative":
         alloc = backends.dispatch(
             "oef-coop", W_virt, m,
-            backend=None if backend == "numpy" else backend, method=method)
+            backend=None if backend == "numpy" else backend, method=method,
+            failsafe=failsafe, max_retries=max_retries,
+                time_budget_s=time_budget_s)
     else:
         raise ValueError(f"unknown mode: {mode}")
     n_t = len(tenants)

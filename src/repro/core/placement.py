@@ -57,11 +57,17 @@ class RoundingPlacer:
         ]
 
     # -- step 1+2: rounding ------------------------------------------------
-    def round_shares(self, ideal: Array, min_demand: Optional[Array] = None) -> Array:
+    def round_shares(self, ideal: Array, min_demand: Optional[Array] = None,
+                     capacity: Optional[Array] = None) -> Array:
         """Largest-remainder rounding of ``ideal + dev`` with capacity repair.
 
         ``min_demand[l]`` is the smallest worker count any of user l's jobs can
         run with; grants smaller than it are deferred (deviation keeps them).
+
+        ``capacity`` is the per-type device budget to round against — the
+        online service passes its post-failure effective capacity here so
+        integer grants never exceed what :meth:`place` can actually pack
+        after masking down hosts. Defaults to the full cluster ``m``.
         """
         ideal = np.asarray(ideal, dtype=np.float64)
         if ideal.shape != (self.n, self.k):
@@ -70,11 +76,15 @@ class RoundingPlacer:
                 f"(n={self.n}, k={self.k}); rebuild the placer when the "
                 f"tenant set or cluster changes"
             )
+        cap = self.m if capacity is None else np.asarray(capacity, dtype=np.int64)
+        if cap.shape != self.m.shape:
+            raise ValueError(
+                f"capacity has shape {cap.shape}, expected {self.m.shape}")
         target = ideal + self.dev
         real = np.zeros((self.n, self.k), dtype=np.int64)
         for j in range(self.k):
             col = np.clip(target[:, j], 0.0, None)
-            budget = int(min(self.m[j], np.floor(col.sum() + 1e-9)))
+            budget = int(min(cap[j], np.floor(col.sum() + 1e-9)))
             base = np.floor(col).astype(np.int64)
             overflow = base.sum() - budget
             if overflow > 0:  # too many from floors alone (dev drift) — trim
@@ -99,7 +109,7 @@ class RoundingPlacer:
             # with the largest outstanding target who can actually use them
             # (work conservation — idle grants would depress throughput).
             for j in range(self.k):
-                freed = int(min(self.m[j], np.floor(np.clip(target[:, j], 0, None).sum() + 1e-9))
+                freed = int(min(cap[j], np.floor(np.clip(target[:, j], 0, None).sum() + 1e-9))
                             ) - int(real[:, j].sum())
                 while freed > 0:
                     resid = target[:, j] - real[:, j]
@@ -147,6 +157,11 @@ class RoundingPlacer:
 
         ``down_hosts`` is a set of ``(type, host)`` pairs currently failed
         (online service): their slots are masked so no job is placed there.
+        When the integer grants in ``real`` exceed the surviving slots of any
+        type, placement raises ``ValueError`` with the per-type shortfall —
+        the caller rounded against pre-failure capacity (pass the effective
+        capacity to :meth:`round_shares`) and silently dropping jobs here
+        would hide the accounting bug.
         """
         free = []  # free[j] = array of free slots per host of type j
         for j in range(self.k):
@@ -161,6 +176,18 @@ class RoundingPlacer:
                     if (j, h) in down_hosts:
                         slots[h] = 0
             free.append(slots)
+        shortfall = {
+            j: (int(real[:, j].sum()), int(free[j].sum()))
+            for j in range(self.k) if int(real[:, j].sum()) > int(free[j].sum())
+        }
+        if shortfall:
+            detail = ", ".join(
+                f"type {j}: granted {g} > {a} surviving slots (short {g - a})"
+                for j, (g, a) in sorted(shortfall.items()))
+            raise ValueError(
+                f"integer grants exceed post-failure capacity — {detail}; "
+                f"round_shares() must be given the effective capacity "
+                f"(down hosts: {sorted(down_hosts) if down_hosts else []})")
         user_budget = real.copy().astype(np.int64)
 
         if naive:

@@ -52,6 +52,22 @@ def build_parser() -> argparse.ArgumentParser:
                          "policies ignore this)")
     ap.add_argument("--audit-every", type=int, default=10,
                     help="fairness-property audit every Nth solve (0 = off)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject the standard seeded fault storm (host-burst "
+                         "storms, corrupt profiles, solver faults; see "
+                         "repro.service.faults.standard_plan)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos fault plan (with --chaos)")
+    ap.add_argument("--journal", type=str, default=None,
+                    help="journal directory: write-ahead event log + periodic "
+                         "state snapshots; if it already holds a journal, the "
+                         "run resumes from the latest snapshot (crash recovery)")
+    ap.add_argument("--snapshot-every", type=int, default=50,
+                    help="snapshot the full scheduler state every N journaled "
+                         "events (with --journal)")
+    ap.add_argument("--no-guardrails", action="store_true",
+                    help="disable the robustness layer (solver escalation "
+                         "ladder, retries, profile quarantine)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=str, default=None, help="write JSON report here")
     ap.add_argument("--emit-trace", type=str, default=None,
@@ -75,18 +91,47 @@ def main(argv=None) -> int:
             host_failures_per_hour=args.host_failures_per_hour,
             seed=args.seed,
         )
+    engine = None
+    if args.chaos:
+        from .faults import ChaosEngine, standard_plan
+        engine = ChaosEngine(standard_plan(seed=args.chaos_seed), cluster)
+        events = engine.chaos_trace(events)
     if args.emit_trace:
         write_trace_csv(events, args.emit_trace)
         print(f"wrote {len(events)} events -> {args.emit_trace}", file=sys.stderr)
         return 0
-    sched = OnlineScheduler(
-        cluster,
-        args.policy,
-        min_resolve_interval_s=args.resolve_interval,
-        audit_every=args.audit_every,
-        solver_backend=args.backend,
-    )
-    report = sched.run(events, until=args.until)
+    journal = None
+    if args.journal:
+        from .journal import Journal, recover_scheduler
+        sched = None
+        if Journal(args.journal,
+                   snapshot_every=args.snapshot_every).available_snapshots():
+            sched, journal, n_applied = recover_scheduler(
+                args.journal, snapshot_every=args.snapshot_every)
+            tail = journal.events(journal.n_applied)
+            events = list(tail) + list(events)[n_applied:]
+            print(f"recovered from {args.journal}: {n_applied} events "
+                  f"journaled, replaying {len(tail)}-event tail", file=sys.stderr)
+        else:
+            journal = Journal(args.journal, snapshot_every=args.snapshot_every)
+    else:
+        sched = None
+    if sched is None:
+        sched = OnlineScheduler(
+            cluster,
+            args.policy,
+            min_resolve_interval_s=args.resolve_interval,
+            audit_every=args.audit_every,
+            solver_backend=args.backend,
+            guardrails=not args.no_guardrails,
+        )
+    if engine is not None:
+        with engine.installed():
+            report = sched.run(events, until=args.until, journal=journal)
+    else:
+        report = sched.run(events, until=args.until, journal=journal)
+    if journal is not None:
+        journal.close()
     text = report.to_json()
     if args.out:
         with open(args.out, "w") as f:
@@ -97,11 +142,16 @@ def main(argv=None) -> int:
     backends_used = ", ".join(
         f"{b}={c}" for b, c in sorted(report.solver_backends.items())) or "n/a"
     reasons = "; ".join(sorted(report.fallback_reasons)) or "none"
+    quarantines = sum(1 for e in report.quarantine_events
+                      if e["action"] == "quarantine")
     print(
         f"solves={report.n_solves} (reused {report.n_reused_solves}) "
         f"backends: {backends_used} | lp-fallbacks={report.fallback_count} "
-        f"({reasons})",
+        f"({reasons}) | degraded={report.degraded_solves} "
+        f"quarantines={quarantines} anomalies={sum(report.anomalies.values())}",
         file=sys.stderr)
+    if engine is not None:
+        print(f"chaos: {engine.summary()}", file=sys.stderr)
     return 0
 
 

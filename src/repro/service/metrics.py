@@ -39,6 +39,12 @@ class SolveRecord:
     backend: str = ""
     #: first declined backend's reason when the chain fell through, else None.
     fallback_reason: Optional[str] = None
+    #: a guardrail engaged for this solve: dispatch escalated past a timeout /
+    #: crash / exhausted transient retries, or the scheduler floored on the
+    #: last-known-good allocation. Routine off-class fallbacks stay False.
+    degraded: bool = False
+    #: tenants quarantined (invalid profiles) at the time of this solve.
+    quarantined: int = 0
 
 
 @dataclasses.dataclass
@@ -65,6 +71,13 @@ class ServiceReport:
     tenant_jct_s: Dict[str, float]
     fairness_audits: List[Dict[str, object]]
     steady_state_estimate: Dict[str, float]
+    #: solves where a guardrail engaged (escalation ladder / last-known-good).
+    degraded_solves: int = 0
+    #: quarantine/release log: {"time", "tenant", "action", "reason"}.
+    quarantine_events: List[Dict[str, object]] = dataclasses.field(
+        default_factory=list)
+    #: ignored anomalous events by kind (duplicate_host_fail, ...).
+    anomalies: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def to_json(self, indent: Optional[int] = 2) -> str:
         return json.dumps(dataclasses.asdict(self), indent=indent, sort_keys=True)
@@ -80,6 +93,8 @@ class MetricsCollector:
         self.queue_delays: Dict[str, float] = {}
         self.solves: List[SolveRecord] = []
         self.audits: List[Dict[str, object]] = []
+        self.quarantine_log: List[Dict[str, object]] = []
+        self.anomalies: Dict[str, int] = {}
         self.n_events = 0
 
     # -- event hooks --------------------------------------------------------
@@ -108,6 +123,18 @@ class MetricsCollector:
 
     def on_solve(self, rec: SolveRecord) -> None:
         self.solves.append(rec)
+
+    def on_quarantine(self, tenant: str, time: float, reason: str) -> None:
+        self.quarantine_log.append(
+            {"time": time, "tenant": tenant, "action": "quarantine",
+             "reason": reason})
+
+    def on_unquarantine(self, tenant: str, time: float) -> None:
+        self.quarantine_log.append(
+            {"time": time, "tenant": tenant, "action": "release", "reason": ""})
+
+    def on_anomaly(self, kind: str) -> None:
+        self.anomalies[kind] = self.anomalies.get(kind, 0) + 1
 
     def on_audit(self, time: float, report: Dict[str, object]) -> None:
         self.audits.append({"time": time, **{k: (bool(v) if isinstance(v, np.bool_) else v)
@@ -149,4 +176,7 @@ class MetricsCollector:
             tenant_jct_s={t: float(np.mean(v)) for t, v in tenant_jct.items()},
             fairness_audits=self.audits,
             steady_state_estimate=steady_state_estimate,
+            degraded_solves=sum(1 for s in self.solves if s.degraded),
+            quarantine_events=list(self.quarantine_log),
+            anomalies=dict(self.anomalies),
         )

@@ -41,7 +41,7 @@ from ..core import backends, baselines, oef, properties
 from ..core.placement import JobRequest, RoundingPlacer
 from ..core.simulator import SimTenant
 from ..core.types import Allocation, ClusterSpec, JobTypeProfile, Tenant
-from .events import Event, EventKind, EventQueue
+from .events import Event, EventKind, EventQueue, TRACE_KINDS
 from .metrics import MetricsCollector, ServiceReport, SolveRecord
 
 Array = np.ndarray
@@ -121,7 +121,21 @@ class OnlineScheduler:
         fast_noncoop: bool = True,
         solver_backend: Optional[str] = None,
         placer_mode: str = "auto",
+        guardrails: bool = True,
+        solver_max_retries: int = 1,
+        solver_time_budget_s: Optional[float] = None,
     ) -> None:
+        """``guardrails`` enables the robustness layer (on by default): solver
+        dispatch runs failsafe (crashing tier -> next backend -> LP), transient
+        declines get ``solver_max_retries`` deterministic same-backend
+        retries, a solve that still fails floors on the last-known-good
+        allocation (or equal share) instead of raising into the event loop,
+        and tenants with invalid profiles (wrong length / non-finite /
+        non-positive speedups) are quarantined out of the batched solve until
+        a valid PROFILE_UPDATE arrives. ``solver_time_budget_s`` adds an
+        opt-in per-solve wall-clock budget (non-deterministic — leave None in
+        bit-exact replays; see docs/robustness.md).
+        """
         if policy not in SERVICE_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; choose from {SERVICE_POLICIES}")
         if solver_backend is not None and solver_backend not in backends.backend_names():
@@ -138,6 +152,9 @@ class OnlineScheduler:
         self.use_weighted_oef = use_weighted_oef and policy.startswith("oef")
         self.fast_noncoop = fast_noncoop
         self.solver_backend = solver_backend
+        self.guardrails = guardrails
+        self.solver_max_retries = solver_max_retries
+        self.solver_time_budget_s = solver_time_budget_s
         if placer_mode == "auto":
             self.naive_placement = not policy.startswith("oef")
         else:
@@ -146,8 +163,12 @@ class OnlineScheduler:
         self.tenants: Dict[str, ServiceTenant] = {}
         self.jobs: Dict[str, ServiceJob] = {}
         self.down_hosts: Set[Tuple[int, int]] = set()
+        self.quarantined: Set[str] = set()
         self.metrics = MetricsCollector()
         self.last_estimate: Dict[str, float] = {}
+        # last successful fair-share solve: (tenant names, ideal X, est) — the
+        # floor of the degradation ladder when every solver tier fails.
+        self._last_good: Optional[Tuple[Tuple[str, ...], Array, Array]] = None
 
         self._placer: Optional[RoundingPlacer] = None
         self._placer_key: Tuple[str, ...] = ()
@@ -179,18 +200,33 @@ class OnlineScheduler:
     # ------------------------------------------------------------------
     # main loop
     # ------------------------------------------------------------------
-    def run(self, events: Sequence[Event], *, until: Optional[float] = None) -> ServiceReport:
+    def run(self, events: Sequence[Event], *, until: Optional[float] = None,
+            journal=None) -> ServiceReport:
+        """``journal`` (a :class:`repro.service.journal.Journal`) makes the
+        run crash-safe: every external event is journaled *before* it is
+        applied (write-ahead) and full-state snapshots land every
+        ``snapshot_every`` events, so :func:`repro.service.journal.resume_scheduler`
+        can replay a killed run to its bit-exact pre-crash state."""
         if self.solver_backend == "jax":
             # Hold one float64 scope across the whole replay: entering the
             # x64 context per solve costs ~0.75 ms of jit-dispatch overhead,
             # which would dominate the sub-5ms re-solve budget.
             from ..core.jax_solve import x64_scope
             with x64_scope():
-                return self._run(events, until=until)
-        return self._run(events, until=until)
+                return self._run(events, until=until, journal=journal)
+        return self._run(events, until=until, journal=journal)
 
-    def _run(self, events: Sequence[Event], *, until: Optional[float] = None) -> ServiceReport:
+    def _run(self, events: Sequence[Event], *, until: Optional[float] = None,
+             journal=None) -> ServiceReport:
         queue = EventQueue(events)
+        if journal is not None:
+            # Recovered internal events (predicted finishes, deferred RESOLVE
+            # timers) are pushed *after* every external so they sort behind
+            # same-time externals — exactly where their original (higher)
+            # sequence numbers placed them in the pre-crash queue.
+            for ev in journal.take_restored_internals():
+                queue.push(ev)
+            journal.ensure_initial(self, queue)
         while True:
             if not queue:
                 if self._dirty:
@@ -204,9 +240,14 @@ class OnlineScheduler:
                 self._advance(until)
                 self._clock = until
                 break
+            external = ev.kind in TRACE_KINDS
+            if journal is not None and external:
+                journal.record(ev)  # write-ahead: journal, then apply
             self._advance(ev.time)
             self._clock = max(self._clock, ev.time)
             self._handle(ev, queue)
+            if journal is not None and external:
+                journal.maybe_snapshot(self, queue)
         unfinished = sum(1 for j in self.jobs.values() if not j.finished)
         horizon = until if until is not None else self._clock
         return self.metrics.report(
@@ -290,6 +331,7 @@ class OnlineScheduler:
             if _tenant_weighted(t):
                 self._weighted_present += 1
             self.metrics.on_tenant_join(ev.tenant, ev.time)
+            self._refresh_quarantine(t, ev.time)
         elif k == EventKind.TENANT_LEAVE:
             t = self.tenants.get(ev.tenant)
             if t is not None:
@@ -313,10 +355,25 @@ class OnlineScheduler:
                 total_work=float(ev.payload["total_work"]), submit_time=ev.time)
         elif k == EventKind.HOST_FAIL:
             pair = (int(ev.payload["type"]), int(ev.payload["host"]))
+            if not self._known_host(pair):
+                self.metrics.on_anomaly("unknown_host")
+                self._maybe_resolve(ev.time, queue)
+                return
+            if pair in self.down_hosts:
+                # already down: a duplicate FAIL must not re-dirty the solver
+                # (and on a set it cannot double-count capacity loss)
+                self.metrics.on_anomaly("duplicate_host_fail")
+                self._maybe_resolve(ev.time, queue)
+                return
             self.down_hosts.add(pair)
             self._drop_dead_workers(pair)
         elif k == EventKind.HOST_RECOVER:
-            self.down_hosts.discard((int(ev.payload["type"]), int(ev.payload["host"])))
+            pair = (int(ev.payload["type"]), int(ev.payload["host"]))
+            if pair not in self.down_hosts:
+                self.metrics.on_anomaly("spurious_host_recover")
+                self._maybe_resolve(ev.time, queue)
+                return
+            self.down_hosts.discard(pair)
         elif k == EventKind.PROFILE_UPDATE:
             t = self.tenants.get(ev.tenant)
             if t is not None:
@@ -329,10 +386,53 @@ class OnlineScheduler:
                 self._profile_epoch += 1
                 now_weighted = t.present and _tenant_weighted(t)
                 self._weighted_present += int(now_weighted) - int(was_weighted)
+                self._refresh_quarantine(t, ev.time)
         else:
             raise ValueError(f"unhandled event kind: {k}")
         self._mark_dirty()
         self._maybe_resolve(ev.time, queue)
+
+    def _known_host(self, pair: Tuple[int, int]) -> bool:
+        j, h = pair
+        if not 0 <= j < len(self.cluster.types):
+            return False
+        n_hosts = int(math.ceil(int(self.cluster.m[j]) / self.devices_per_host))
+        return 0 <= h < n_hosts
+
+    # ------------------------------------------------------------------
+    # input sanitization: profile quarantine
+    # ------------------------------------------------------------------
+    def _profile_invalid_reason(self, t: ServiceTenant) -> Optional[str]:
+        """Why this tenant's profiles would poison a batched solve (or None)."""
+        k = len(self.cluster.types)
+        for name in sorted(t.job_types):
+            v = np.asarray(t.job_types[name].speedup, dtype=np.float64)
+            if v.shape != (k,):
+                return (f"job type {name!r}: speedup has {v.size} entries, "
+                        f"cluster has {k} device types")
+            if not bool(np.all(np.isfinite(v))):
+                return f"job type {name!r}: non-finite speedup"
+            if bool(np.any(v <= 0.0)):
+                return f"job type {name!r}: non-positive speedup"
+        return None
+
+    def _refresh_quarantine(self, t: ServiceTenant, now: float) -> None:
+        """Quarantine tenants whose profiles would poison the solve; release
+        them as soon as every job type validates again. Quarantined tenants
+        keep their jobs queued but are excluded from the fair-share solve."""
+        if not self.guardrails:
+            return
+        reason = self._profile_invalid_reason(t)
+        if reason is not None and t.name not in self.quarantined:
+            self.quarantined.add(t.name)
+            self.metrics.on_quarantine(t.name, now, reason)
+            for job in self.jobs.values():
+                if job.tenant == t.name and not job.finished:
+                    job.rate = 0.0
+                    job.version += 1  # invalidate stale finish predictions
+        elif reason is None and t.name in self.quarantined:
+            self.quarantined.discard(t.name)
+            self.metrics.on_unquarantine(t.name, now)
 
     def _drop_dead_workers(self, pair: Tuple[int, int]) -> None:
         """A host died: immediately stop crediting workers placed on it
@@ -396,7 +496,7 @@ class OnlineScheduler:
                 has_work.add(job.tenant)
         # Tenant registration order, restricted to the (sorted) worked set —
         # never hash order, so replay is independent of PYTHONHASHSEED.
-        worked = frozenset(sorted(has_work))
+        worked = frozenset(sorted(has_work - self.quarantined))
         return [t for t in self.tenants.values() if t.present and t.name in worked]
 
     def _solve_allocation(self, active: List[ServiceTenant], m_eff: Array):
@@ -418,7 +518,10 @@ class OnlineScheduler:
                 ten, ClusterSpec(self.cluster.types, tuple(int(x) for x in m_eff)),
                 mode=mode, prev=self._prev_alloc,
                 fast=self.fast_noncoop and mode == "noncooperative",
-                backend=self.solver_backend)
+                backend=self.solver_backend,
+                failsafe=self.guardrails,
+                max_retries=self.solver_max_retries if self.guardrails else 0,
+                time_budget_s=self.solver_time_budget_s)
             self._prev_alloc = ta.row_alloc
             ideal = ta.X
             est = np.einsum("lk,lk->l", W, ta.X)
@@ -427,7 +530,10 @@ class OnlineScheduler:
             if self.policy in OEF_POLICIES:
                 alloc = oef.solve_incremental(
                     W, m_eff, policy=self.policy, prev=self._prev_alloc,
-                    fast=self.fast_noncoop, backend=self.solver_backend)
+                    fast=self.fast_noncoop, backend=self.solver_backend,
+                    failsafe=self.guardrails,
+                    max_retries=self.solver_max_retries if self.guardrails else 0,
+                    time_budget_s=self.solver_time_budget_s)
             else:
                 alloc = baselines.solve_incremental(
                     W, m_eff, policy=self.policy, prev=self._prev_alloc)
@@ -435,6 +541,24 @@ class OnlineScheduler:
             ideal, est = alloc.X, alloc.throughput
             reused = bool(alloc.meta.get("reused", False))
         return ideal, est, W, reused
+
+    def _fallback_allocation(self, active: List[ServiceTenant], m_eff: Array):
+        """Last rung of the degradation ladder: reuse the last-known-good
+        fair shares when the tenant roster still matches (rounding against
+        the *current* effective capacity keeps grants feasible), else fall
+        back to an equal per-type split. Never raises."""
+        names = tuple(t.name for t in active)
+        W = np.empty((len(active), len(self.cluster.types)))
+        for i, t in enumerate(active):
+            W[i] = t.mean_speedup()
+        if self._last_good is not None and self._last_good[0] == names:
+            ideal = self._last_good[1]
+            est = self._last_good[2]
+        else:
+            ideal = np.tile(m_eff / max(len(active), 1), (len(active), 1))
+            est = np.einsum("lk,lk->l", W, ideal)
+        self.metrics.on_anomaly("solver_floor")
+        return ideal, np.asarray(est, dtype=np.float64), W
 
     def _resolve(self, now: float, queue: EventQueue) -> None:
         dirty_batch = self._dirty_count
@@ -453,7 +577,25 @@ class OnlineScheduler:
         m_eff = self._effective_capacity()
 
         t0 = _time.perf_counter()  # repro: noqa[D104] — telemetry only
-        ideal, est, W, reused = self._solve_allocation(active, m_eff)
+        degraded = False
+        try:
+            ideal, est, W, reused = self._solve_allocation(active, m_eff)
+            if not reused:
+                meta = self._prev_alloc.meta if self._prev_alloc is not None else {}
+                degraded = bool(meta.get("degraded", False))
+            self._last_good = (tuple(t.name for t in active), ideal, est)
+        except Exception:
+            # the floor of the ladder: every solver tier failed (or guardrails
+            # are off and something raised) — fall back to the last-known-good
+            # allocation rather than killing the event loop.
+            if not self.guardrails:
+                raise
+            ideal, est, W = self._fallback_allocation(active, m_eff)
+            reused = False
+            degraded = True
+            floored = True
+        else:
+            floored = False
         solver_s = _time.perf_counter() - t0  # repro: noqa[D104] — telemetry only
 
         key = tuple(t.name for t in active)
@@ -461,7 +603,7 @@ class OnlineScheduler:
             self._placer = RoundingPlacer(len(active), self.cluster.m, self.devices_per_host)
             self._placer_key = key
         min_dem = np.array([min(jt.min_demand for jt in t.job_types.values()) for t in active])
-        real = self._placer.round_shares(ideal, min_dem)
+        real = self._placer.round_shares(ideal, min_dem, capacity=m_eff)
 
         reqs: List[JobRequest] = []
         tenant_jobs: Dict[str, List[ServiceJob]] = {}
@@ -521,12 +663,14 @@ class OnlineScheduler:
                               if not j.finished and j.rate > 0]
         self._n_solves += 1
         self.last_estimate = {t.name: float(e) for t, e in zip(active, est)}
-        meta = self._prev_alloc.meta if self._prev_alloc is not None else {}
+        meta = ({} if floored else
+                self._prev_alloc.meta if self._prev_alloc is not None else {})
         self.metrics.on_solve(SolveRecord(
             time=now, n_tenants=len(active), latency_s=solver_s, reused=reused,
             dirty_events=dirty_batch, policy=self.policy,
-            backend=str(meta.get("backend", "")),
-            fallback_reason=meta.get("fallback_reason")))
+            backend="last-known-good" if floored else str(meta.get("backend", "")),
+            fallback_reason=meta.get("fallback_reason"),
+            degraded=degraded, quarantined=len(self.quarantined)))
         if self.audit_every > 0 and self._n_solves % self.audit_every == 0:
             self.metrics.on_audit(now, properties.property_report(W, ideal, m_eff))
 

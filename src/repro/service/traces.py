@@ -118,21 +118,83 @@ def synthetic_trace(
     if host_failures_per_hour > 0:
         if cluster is None:
             raise ValueError("host_failures_per_hour needs a cluster spec")
-        rate = host_failures_per_hour / 3600.0
-        for j in range(cluster.k):
-            n_hosts = int(np.ceil(cluster.m[j] / devices_per_host))
-            for h in range(n_hosts):
-                t = float(rng.exponential(1.0 / rate))
-                while t < duration_s:
-                    events.append(Event(t, EventKind.HOST_FAIL,
-                                        payload={"type": j, "host": h}))
-                    up = t + float(rng.exponential(mean_outage_s))
-                    if up < duration_s:
-                        events.append(Event(up, EventKind.HOST_RECOVER,
-                                            payload={"type": j, "host": h}))
-                    t = up + float(rng.exponential(1.0 / rate))
+        events.extend(paired_host_churn(
+            cluster, duration_s=duration_s,
+            failures_per_hour=host_failures_per_hour,
+            mean_outage_s=mean_outage_s,
+            devices_per_host=devices_per_host, rng=rng))
     events.sort(key=lambda e: e.time)  # stable: same-time order = generation order
+    bad = validate_host_pairing(events)
+    if bad:
+        raise RuntimeError(f"generated trace has unpaired host churn: {bad}")
     return events
+
+
+def paired_host_churn(
+    cluster: ClusterSpec,
+    *,
+    duration_s: float,
+    failures_per_hour: float,
+    mean_outage_s: float,
+    devices_per_host: int = 4,
+    rng: np.random.Generator,
+) -> List[Event]:
+    """Per-host alternating FAIL/RECOVER churn — strictly paired by design.
+
+    Each host runs its own renewal process: exponential time-to-failure,
+    exponential outage, and the next failure clock only starts after the
+    recovery, so a host can never be re-failed while already down. Every
+    emitted FAIL has its matching RECOVER in the stream (an outage that
+    outlives ``duration_s`` still emits the RECOVER past the horizon rather
+    than leaving the pair dangling — replays bounded by ``until=`` simply
+    never pop it). The chaos harness (:mod:`repro.service.faults`) reuses
+    this helper and the same invariant when merging storm churn into a base
+    trace.
+    """
+    events: List[Event] = []
+    rate = failures_per_hour / 3600.0
+    for j in range(cluster.k):
+        n_hosts = int(np.ceil(cluster.m[j] / devices_per_host))
+        for h in range(n_hosts):
+            t = float(rng.exponential(1.0 / rate))
+            while t < duration_s:
+                up = t + float(rng.exponential(mean_outage_s))
+                events.append(Event(t, EventKind.HOST_FAIL,
+                                    payload={"type": j, "host": h}))
+                events.append(Event(up, EventKind.HOST_RECOVER,
+                                    payload={"type": j, "host": h}))
+                t = up + float(rng.exponential(1.0 / rate))
+    return events
+
+
+def validate_host_pairing(events: Sequence[Event]) -> List[str]:
+    """Check HOST_FAIL/HOST_RECOVER alternation per host in time order.
+
+    Returns human-readable violations (empty = clean): a FAIL for a host
+    already down, a RECOVER for a host that is up, or a FAIL left dangling
+    with no matching RECOVER anywhere in the stream. Trace generators assert
+    on this; the scheduler additionally tolerates violating streams at
+    runtime (counted under ``report.anomalies``) since merged or hand-edited
+    traces may break the invariant.
+    """
+    violations: List[str] = []
+    down: set = set()
+    for ev in sorted(events, key=lambda e: e.time):
+        if ev.kind == EventKind.HOST_FAIL:
+            pair = (int(ev.payload["type"]), int(ev.payload["host"]))
+            if pair in down:
+                violations.append(
+                    f"t={ev.time}: host {pair} re-failed while already down")
+            down.add(pair)
+        elif ev.kind == EventKind.HOST_RECOVER:
+            pair = (int(ev.payload["type"]), int(ev.payload["host"]))
+            if pair not in down:
+                violations.append(
+                    f"t={ev.time}: host {pair} recovered while not down")
+            down.discard(pair)
+    for pair in sorted(down):
+        violations.append(f"host {pair} failed but never recovers in-stream")
+    return violations
 
 
 def _submit(t, tenant, jt, q, rng, workers_choices, mean_work_s) -> Event:

@@ -37,6 +37,7 @@ FIXTURE_CASES = [
     ("c302_mutable_default.py", "C302"),
     ("c303_bare_assert.py", "C303"),
     ("c304_unregistered_backend.py", "C304"),
+    ("c305_swallowed_exception.py", "C305"),
 ]
 
 

@@ -101,3 +101,26 @@ def test_sticky_placement_reuses_assignment():
     first = placer.place(real, jobs)
     second = placer.place(real, jobs, prev=first.assignments)
     assert second.assignments["j0"] == first.assignments["j0"]
+
+
+def test_round_shares_capacity_aware():
+    """round_shares(capacity=) budgets against post-failure capacity."""
+    placer = RoundingPlacer(2, [8])
+    X = np.array([[2.0], [2.0]])
+    real = placer.round_shares(X, capacity=np.array([4]))
+    assert real.sum() <= 4
+
+
+def test_place_raises_on_post_failure_shortfall():
+    """Integer grants beyond surviving-slot capacity must fail loudly with a
+    per-type shortfall message, not silently strand workers."""
+    placer = RoundingPlacer(1, [8], devices_per_host=4)
+    real = np.array([[8]])
+    jobs = [JobRequest(user=0, job_id="j0", workers=8)]
+    with pytest.raises(ValueError, match=r"type 0: granted 8 > 4 surviving"):
+        placer.place(real, jobs, down_hosts={(0, 0)})
+    # the error names the fix: round against the effective capacity
+    real_ok = placer.round_shares(np.array([[8.0]]), capacity=np.array([4]))
+    res = placer.place(real_ok, [JobRequest(user=0, job_id="j0", workers=4)],
+                       down_hosts={(0, 0)})
+    assert "j0" in res.assignments
