@@ -1,0 +1,100 @@
+"""Observability overhead gate: instrumented vs. bare event throughput.
+
+The control plane is instrumented permanently — spans in the scheduler's
+event loop, dispatch chain and jax tiers, plus the per-solve metrics
+emission — and pays for it even when no tracer/registry is installed (one
+module-global load and a kwargs dict build per site). This benchmark
+replays the same seeded synthetic trace through ``OnlineScheduler`` twice
+per round — once bare, once with a live ``Tracer`` + ``MetricsRegistry`` —
+and gates the *enabled* cost: events/sec with observability on must stay
+within ``OVERHEAD_CEILING`` (3%) of the bare run (best-of-``REPEATS``
+per mode, interleaved, to shed scheduler noise).
+
+Dumps the raw numbers to ``BENCH_obs.json`` at the repo root. A ceiling
+violation raises, which ``benchmarks/run.py`` reports as a FAILED row.
+"""
+from __future__ import annotations
+
+import gc
+import json
+import os
+import time
+
+from repro import obs
+from repro.core.types import ClusterSpec
+from repro.service import OnlineScheduler, synthetic_trace
+from repro.service.traces import default_job_types
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
+
+OVERHEAD_CEILING = 0.03
+REPEATS = 3
+
+
+def _replay(observed: bool):
+    cluster = ClusterSpec(types=("rtx3070", "rtx3080", "rtx3090"),
+                          m=(16, 16, 16))
+    events = synthetic_trace(
+        8, job_types=default_job_types("paper"), cluster=cluster,
+        duration_s=3600.0, mean_interarrival_s=120.0, mean_work_s=1200.0,
+        seed=0)
+    sched = OnlineScheduler(cluster, "oef-coop", min_resolve_interval_s=30.0,
+                            audit_every=10)
+    tracer = obs.Tracer() if observed else None
+    reg = obs.MetricsRegistry() if observed else None
+    if observed:
+        obs.set_tracer(tracer)
+        obs.set_metrics(reg)
+    gc.collect()
+    t0 = time.perf_counter()
+    try:
+        report = sched.run(events, until=7200.0)
+    finally:
+        if observed:
+            obs.set_tracer(None)
+            obs.set_metrics(None)
+    wall = time.perf_counter() - t0
+    return report, wall, tracer
+
+
+def run() -> list:
+    best = {False: 0.0, True: 0.0}
+    n_events = n_spans = n_samples = 0
+    for _ in range(REPEATS):
+        for observed in (False, True):
+            report, wall, tracer = _replay(observed)
+            n_events = report.n_events
+            best[observed] = max(best[observed], n_events / max(wall, 1e-9))
+            if tracer is not None:
+                n_spans = len(tracer.spans) + len(tracer.instants)
+                n_samples = report.n_solves
+    overhead = 1.0 - best[True] / best[False]
+    dump = {
+        "n_events": n_events,
+        "events_per_sec_bare": best[False],
+        "events_per_sec_observed": best[True],
+        "overhead_frac": overhead,
+        "overhead_ceiling": OVERHEAD_CEILING,
+        "spans_per_run": n_spans,
+        "samples_per_run": n_samples,
+        "repeats": REPEATS,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(dump, f, indent=2, sort_keys=True)
+    rows = [
+        ("obs/events_bare", 1e6 / best[False], f"{best[False]:.0f} ev/s"),
+        ("obs/events_observed", 1e6 / best[True],
+         f"{best[True]:.0f} ev/s ({n_spans} spans, {n_samples} samples)"),
+        ("obs/overhead", max(overhead, 0.0) * 1e4,
+         f"{overhead:+.2%} (ceiling {OVERHEAD_CEILING:.0%})"),
+    ]
+    if overhead > OVERHEAD_CEILING:
+        raise RuntimeError(
+            f"observability overhead {overhead:.2%} exceeds the "
+            f"{OVERHEAD_CEILING:.0%} events/s ceiling (see BENCH_obs.json)")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -29,6 +29,7 @@ MODULES = [
     "extensions",
     "service_throughput",
     "chaos_recovery",
+    "obs_overhead",
 ]
 
 

@@ -32,4 +32,7 @@ EOF
 echo "== chaos smoke: fault storm + bit-exact journal recovery (~5s) =="
 python scripts/smoke_chaos.py
 
+echo "== obs smoke: trace/metrics artifacts + report reader (~3s) =="
+python scripts/smoke_obs.py
+
 echo "== all checks passed =="

@@ -13,7 +13,8 @@ the robustness layer (see docs/robustness.md):
   3. **bit-exact journal recovery** — a journaled run killed at its midpoint
      event resumes via ``resume_scheduler`` to a final report bit-identical
      to the uninterrupted run (wall-clock latency fields excluded; repr
-     comparison because NaN != NaN).
+     comparison because NaN != NaN). The resumed run executes with a live
+     ``repro.obs`` tracer installed: observability must not perturb replay.
 
 Usage: PYTHONPATH=src python scripts/smoke_chaos.py
 """
@@ -25,6 +26,7 @@ import shutil
 import sys
 import tempfile
 
+from repro import obs
 from repro.service import OnlineScheduler, synthetic_trace
 from repro.service.faults import ChaosEngine, FaultPlan, standard_plan
 from repro.service.journal import Journal, resume_scheduler
@@ -91,13 +93,20 @@ def main() -> int:
         _sched(cluster).run(list(jtrace), until=times[len(times) // 2],
                             journal=journal)
         journal.close()
-        rep_res = resume_scheduler(crash_dir, list(jtrace), snapshot_every=10)
+        tracer = obs.Tracer()
+        obs.set_tracer(tracer)
+        try:
+            rep_res = resume_scheduler(crash_dir, list(jtrace),
+                                       snapshot_every=10)
+        finally:
+            obs.set_tracer(None)
         if _view(rep_ref) != _view(rep_res):
-            print("FAIL: resumed report diverged from uninterrupted run",
-                  file=sys.stderr)
+            print("FAIL: resumed report diverged from uninterrupted run "
+                  "(with tracing enabled)", file=sys.stderr)
             return 1
         n_recs = len(Journal(crash_dir, snapshot_every=10).events())
-        print(f"recovery ok: {n_recs} journaled events replayed bit-exact")
+        print(f"recovery ok: {n_recs} journaled events replayed bit-exact "
+              f"under tracing ({len(tracer.spans)} spans)")
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
     return 0

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""CI smoke for the observability plane (repro.obs).
+
+Three fast gates (~3s total), mirroring the acceptance criteria of
+docs/observability.md:
+
+  1. **artifact production** — ``python -m repro.service --trace t.json
+     --metrics m.jsonl`` completes and writes both artifacts;
+  2. **span nesting** — the Chrome trace reconstructs (by the same
+     containment rule Perfetto uses) at least one
+     ``...resolve;solve;dispatch;backend/<name>`` chain, and the metrics
+     JSONL's final ``service.solves`` counter equals the report's
+     ``n_solves`` with a non-empty fairness-over-time series;
+  3. **reader CLI** — ``python -m repro.obs report`` renders both artifacts
+     (per-stage latency breakdown + fairness table) with exit code 0.
+
+Usage: PYTHONPATH=src python scripts/smoke_obs.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+from repro.obs import report as obs_report
+
+
+def main() -> int:
+    workdir = tempfile.mkdtemp(prefix="smoke_obs_")
+    tpath = os.path.join(workdir, "t.json")
+    mpath = os.path.join(workdir, "m.jsonl")
+    rpath = os.path.join(workdir, "report.json")
+    try:
+        # gate 1: the service CLI writes both artifacts
+        subprocess.check_call([
+            sys.executable, "-m", "repro.service", "--policy", "oef-coop",
+            "--tenants", "3", "--duration", "1800",
+            "--mean-interarrival", "300", "--mean-work", "600", "--seed", "0",
+            "--audit-every", "1", "--trace", tpath, "--metrics", mpath,
+            "--out", rpath])
+        if not (os.path.exists(tpath) and os.path.exists(mpath)):
+            print("FAIL: --trace/--metrics artifacts missing", file=sys.stderr)
+            return 1
+
+        # gate 2: span nesting + metrics/report consistency
+        doc = obs_report.load_chrome_trace(tpath)
+        paths = {p for p, _ts, _dur in obs_report.span_paths(doc)}
+        if not any(";resolve;solve;dispatch;backend/" in p for p in paths):
+            print("FAIL: no resolve;solve;dispatch;backend/* chain in "
+                  f"{sorted(paths)}", file=sys.stderr)
+            return 1
+        rows = obs_report.load_metrics_jsonl(mpath)
+        with open(rpath) as f:
+            report = json.load(f)
+        got = rows[-1]["counters"]["service.solves"]
+        if got != report["n_solves"]:
+            print(f"FAIL: service.solves counter {got} != report n_solves "
+                  f"{report['n_solves']}", file=sys.stderr)
+            return 1
+        series = obs_report.fairness_series(rows)
+        if not series:
+            print("FAIL: empty fairness-over-time series", file=sys.stderr)
+            return 1
+        print(f"artifacts ok: {len(paths)} span paths, {len(rows)} samples, "
+              f"{len(series)} fairness audits")
+
+        # gate 3: the reader CLI renders both artifacts
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.obs", "report", tpath, mpath],
+            capture_output=True, text=True)
+        if out.returncode != 0:
+            print(f"FAIL: repro.obs report exited {out.returncode}:\n"
+                  f"{out.stderr}", file=sys.stderr)
+            return 1
+        for needle in ("per-stage latency breakdown", "fairness over time"):
+            if needle not in out.stdout:
+                print(f"FAIL: {needle!r} missing from report output",
+                      file=sys.stderr)
+                return 1
+        print(f"reader ok: {len(out.stdout.splitlines())} report lines")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

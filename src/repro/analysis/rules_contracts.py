@@ -259,6 +259,46 @@ class SwallowedException(Rule):
         return True
 
 
+_WALL_CLOCK_MODULES = {"time", "datetime"}
+
+
+class WallClockImportBypassesObsClock(Rule):
+    rule_id = "C306"
+    title = "wall-clock module imported directly in the control plane"
+    rationale = (
+        "Control-plane timing goes through repro.obs.clock (wall/epoch/"
+        "sleep): one sanctioned source keeps telemetry timers out of "
+        "replayed state and lets the tracer reconcile span timestamps "
+        "against a single clock. A direct `import time` / `import datetime` "
+        "in service/ or core/ reopens, module-wide, the bypass D104 closes "
+        "call-by-call."
+    )
+    scope = ("repro/service/", "repro/core/")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.split(".")[0] in _WALL_CLOCK_MODULES:
+                        findings.append(ctx.finding(
+                            node, self.rule_id,
+                            f"`import {a.name}` in control-plane code; route "
+                            f"timing through repro.obs.clock (wall/epoch/"
+                            f"sleep) instead",
+                        ))
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                if node.module and node.module.split(".")[0] in _WALL_CLOCK_MODULES:
+                    findings.append(ctx.finding(
+                        node, self.rule_id,
+                        f"`from {node.module} import ...` in control-plane "
+                        f"code; route timing through repro.obs.clock "
+                        f"(wall/epoch/sleep) instead",
+                    ))
+        return findings
+
+
 def rules() -> List[Rule]:
     return [UnauditedSolver(), MutableDefaultArg(), BareAssert(),
-            UnregisteredBackendSolver(), SwallowedException()]
+            UnregisteredBackendSolver(), SwallowedException(),
+            WallClockImportBypassesObsClock()]

@@ -27,9 +27,10 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import inspect
-import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..obs import clock as _obs_clock
+from ..obs import trace as _obs_trace
 from .types import Allocation
 
 
@@ -254,52 +255,70 @@ def dispatch(program: str, W, m, *, backend: Optional[str] = None,
     retries_left = max_retries
     total_retries = 0
     degraded = False
-    while True:
-        try:
-            for hook in list(_DISPATCH_HOOKS):
-                hook(program, spec.backend, W, m)
-            t0 = time.perf_counter()
-            alloc = spec.solver(
-                W, m, **{k: v for k, v in kwargs.items() if k in spec.accepts})
-            if time_budget_s is not None:
-                elapsed = time.perf_counter() - t0
-                if elapsed > time_budget_s:
-                    raise SolveTimeout(
-                        f"backend {spec.backend!r} took {elapsed:.3f}s "
-                        f"(budget {time_budget_s:.3f}s)")
-        except BackendError as e:
-            if e.transient and retries_left > 0:
-                retries_left -= 1
-                total_retries += 1
+    attempt_no = 0
+    with _obs_trace.span("dispatch", "core", program=program):
+        while True:
+            attempt_no += 1
+            try:
+                with _obs_trace.span("backend/" + spec.backend, "core",
+                                     attempt=attempt_no):
+                    for hook in list(_DISPATCH_HOOKS):
+                        hook(program, spec.backend, W, m)
+                    t0 = _obs_clock.wall()
+                    alloc = spec.solver(
+                        W, m,
+                        **{k: v for k, v in kwargs.items()
+                           if k in spec.accepts})
+                    if time_budget_s is not None:
+                        elapsed = _obs_clock.wall() - t0
+                        if elapsed > time_budget_s:
+                            raise SolveTimeout(
+                                f"backend {spec.backend!r} took {elapsed:.3f}s "
+                                f"(budget {time_budget_s:.3f}s)")
+            except BackendError as e:
+                if e.transient and retries_left > 0:
+                    retries_left -= 1
+                    total_retries += 1
+                    _obs_trace.instant("dispatch/retry", "core",
+                                       backend=spec.backend)
+                    continue
+                if isinstance(e, SolveTimeout) or (e.transient and max_retries > 0):
+                    degraded = True  # guardrail event, not a routine decline
+                    _obs_trace.instant(
+                        "guardrail/timeout" if isinstance(e, SolveTimeout)
+                        else "guardrail/retries_exhausted",
+                        "guardrail", backend=spec.backend)
+                attempts.append((spec.backend, str(e)))
+                if spec.fallback is None:
+                    raise BackendError(
+                        f"program {program!r}: every backend in the chain "
+                        f"declined: {attempts}") from e
+                _obs_trace.instant("dispatch/fallback", "core",
+                                   src=spec.backend, dst=spec.fallback)
+                spec = resolve_backend(program, spec.fallback)
+                retries_left = max_retries
                 continue
-            if isinstance(e, SolveTimeout) or (e.transient and max_retries > 0):
-                degraded = True  # guardrail event, not a routine decline
-            attempts.append((spec.backend, str(e)))
-            if spec.fallback is None:
-                raise BackendError(
-                    f"program {program!r}: every backend in the chain "
-                    f"declined: {attempts}") from e
-            spec = resolve_backend(program, spec.fallback)
-            retries_left = max_retries
-            continue
-        except Exception as e:  # repro guardrail: escalate instead of raising
-            if not failsafe:
-                raise
-            degraded = True
-            attempts.append((spec.backend, f"{type(e).__name__}: {e}"))
-            if spec.fallback is None:
-                raise BackendError(
-                    f"program {program!r}: every backend in the chain "
-                    f"failed: {attempts}") from e
-            spec = resolve_backend(program, spec.fallback)
-            retries_left = max_retries
-            continue
-        alloc.meta["backend"] = spec.backend
-        if attempts:
-            alloc.meta["fallback_from"] = attempts[0][0]
-            alloc.meta["fallback_reason"] = attempts[0][1]
-        if total_retries:
-            alloc.meta["retries"] = total_retries
-        if degraded:
-            alloc.meta["degraded"] = True
-        return alloc
+            except Exception as e:  # repro guardrail: escalate instead of raising
+                if not failsafe:
+                    raise
+                degraded = True
+                _obs_trace.instant("guardrail/failsafe", "guardrail",
+                                   backend=spec.backend,
+                                   error=type(e).__name__)
+                attempts.append((spec.backend, f"{type(e).__name__}: {e}"))
+                if spec.fallback is None:
+                    raise BackendError(
+                        f"program {program!r}: every backend in the chain "
+                        f"failed: {attempts}") from e
+                spec = resolve_backend(program, spec.fallback)
+                retries_left = max_retries
+                continue
+            alloc.meta["backend"] = spec.backend
+            if attempts:
+                alloc.meta["fallback_from"] = attempts[0][0]
+                alloc.meta["fallback_reason"] = attempts[0][1]
+            if total_retries:
+                alloc.meta["retries"] = total_retries
+            if degraded:
+                alloc.meta["degraded"] = True
+            return alloc

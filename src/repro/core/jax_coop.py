@@ -54,6 +54,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels.envy import envy_gaps, envy_gaps_ref
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import backends
 from .jax_solve import bucket, x64_scope
 from .lp import solve_lp
@@ -61,6 +63,9 @@ from .properties import audited_solver
 from .types import Allocation, default_rows, validate_speedup_matrix
 
 Array = np.ndarray
+
+#: PD-segment jit cache keys compiled this process (see jax_solve._COMPILED).
+_COMPILED: set = set()
 
 #: iterations per jitted segment (one restart-to-average per segment).
 SEG_ITERS = 250
@@ -464,22 +469,35 @@ def solve_coop_pd(
         # set: polishing the carried-over state against the *new* m often
         # certifies outright, making the steady-state re-solve one host-side
         # least-squares pass with no PD segment at all
-        got = _certified_polish(Wd, cnt, m, x[:g], p, L[:g, :g], tol)
+        with obs_trace.span("certify", "jax", tier="coop", warm=True):
+            got = _certified_polish(Wd, cnt, m, x[:g], p, L[:g, :g], tol)
         if got is not None:
             return _emit(*got, 0, "active-set")
 
     iters = 0
     prev = (x.copy(), p.copy(), L.copy())
+    key = (Wp.shape, seg, bool(use_kernel), bool(interpret))
+    fresh = key not in _COMPILED
+    if fresh:
+        _COMPILED.add(key)
+        reg = obs_metrics.get_metrics()
+        if reg is not None:
+            reg.counter(f"jax.recompiles.coop.g{G}").inc()
     with x64_scope():
         while iters < max_iters:
-            x, p, L = _pd_segment(
-                Wp, cntp, m, pairm, tau, sig_env, sig_cap, x, p, L,
-                seg=seg, use_kernel=bool(use_kernel), interpret=bool(interpret))
-            iters += seg
-            xh = np.asarray(x)
-            ph = np.asarray(p)
-            Lh = np.asarray(L)
-            got = _certified_polish(Wd, cnt, m, xh[:g], ph, Lh[:g, :g], tol)
+            with obs_trace.span("compile" if fresh else "execute", "jax",
+                                tier="coop", bucket=G):
+                x, p, L = _pd_segment(
+                    Wp, cntp, m, pairm, tau, sig_env, sig_cap, x, p, L,
+                    seg=seg, use_kernel=bool(use_kernel),
+                    interpret=bool(interpret))
+                iters += seg
+                xh = np.asarray(x)
+                ph = np.asarray(p)
+                Lh = np.asarray(L)
+            fresh = False
+            with obs_trace.span("certify", "jax", tier="coop", warm=False):
+                got = _certified_polish(Wd, cnt, m, xh[:g], ph, Lh[:g, :g], tol)
             if got is not None:
                 return _emit(*got, iters, "active-set")
             # cross over to the exact reduced LP when further PD segments
@@ -490,13 +508,15 @@ def solve_coop_pd(
                         np.abs(Lh - prev[2]).max())
             if g <= RESCUE_MAX_G and (moved <= 1e-12
                                       or iters >= RESCUE_AFTER_ITERS):
-                got = _reduced_lp_rescue(Wd, cnt, m, tol)
+                with obs_trace.span("rescue", "jax", tier="coop", g=g):
+                    got = _reduced_lp_rescue(Wd, cnt, m, tol)
                 if got is not None:
                     return _emit(*got, iters, "reduced-lp")
             prev = (xh, ph, Lh)
             x, p, L = xh, ph, Lh  # keep restart state on host dtype roundtrip
     if g <= RESCUE_MAX_G:
-        got = _reduced_lp_rescue(Wd, cnt, m, tol)
+        with obs_trace.span("rescue", "jax", tier="coop", g=g):
+            got = _reduced_lp_rescue(Wd, cnt, m, tol)
         if got is not None:
             return _emit(*got, iters, "reduced-lp")
     raise backends.BackendError(
@@ -587,15 +607,17 @@ def prewarm(n_max: int, k: int, *, seg: int = SEG_ITERS) -> List[int]:
         sizes.append(s)
         s *= 2
     sizes.append(bucket(n_max))
-    with x64_scope():
-        for G in sizes:
-            pairm = 1.0 - np.eye(G)
-            x, p, L = _pd_segment(
-                np.ones((G, k)), np.ones(G), np.full(k, 2.0), pairm,
-                np.full((G, k), 0.1), np.full(G, 0.1), 0.1,
-                np.zeros((G, k)), np.zeros(k), np.zeros((G, G)),
-                seg=seg, use_kernel=False, interpret=False)
-            x.block_until_ready()
+    with obs_trace.span("prewarm", "jax", tier="coop", buckets=len(sizes)):
+        with x64_scope():
+            for G in sizes:
+                pairm = 1.0 - np.eye(G)
+                x, p, L = _pd_segment(
+                    np.ones((G, k)), np.ones(G), np.full(k, 2.0), pairm,
+                    np.full((G, k), 0.1), np.full(G, 0.1), 0.1,
+                    np.zeros((G, k)), np.zeros(k), np.zeros((G, G)),
+                    seg=seg, use_kernel=False, interpret=False)
+                x.block_until_ready()
+                _COMPILED.add(((G, k), seg, False, False))
     return sizes
 
 

@@ -50,8 +50,15 @@ from ..kernels.waterfill import (
     waterfill_masses,
     waterfill_masses_ref,
 )
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 Array = np.ndarray
+
+#: jit cache keys already compiled this process (prewarm registers its keys
+#: too) — used to label the solve span "compile" vs "execute" and to count
+#: recompiles per padding bucket without asking jax for its cache internals.
+_COMPILED: set = set()
 
 #: multisection lanes per step; bracket shrinks by LANES+1 each iteration.
 LANES = 8
@@ -199,7 +206,8 @@ def solve_noncoop_fast_jax(
     for instances outside the consistently-ordered class (callers that want
     the automatic LP fallback use ``oef.solve_noncoop_fast(backend="jax")``).
     """
-    order, Wf, m, mask = _prepare(W, m, _presorted)
+    with obs_trace.span("prepare", "jax", tier="noncoop"):
+        order, Wf, m, mask = _prepare(W, m, _presorted)
     n, k = np.asarray(W).shape
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
@@ -211,16 +219,25 @@ def solve_noncoop_fast_jax(
     hi_cap = float(np.max(W) * m.sum()) + 1.0
     use_hint = tau_hint is not None and 0.0 < float(tau_hint) < hi_cap
     hint = float(tau_hint) if use_hint else -1.0
+    key = (Wf.shape, lanes, iters, use_hint, bool(use_kernel), bool(interpret))
+    fresh = key not in _COMPILED
+    if fresh:
+        _COMPILED.add(key)
+        reg = obs_metrics.get_metrics()
+        if reg is not None:
+            reg.counter(f"jax.recompiles.noncoop.b{Wf.shape[0]}").inc()
     with x64_scope():
-        # numpy operands go straight into the jitted call: pjit's C++
-        # dispatch does the host->device transfer far cheaper than an
-        # explicit jnp.asarray per operand (~1 ms/solve at 1024 tenants).
-        tau, Xf = _solve_padded(
-            Wf, m, mask, np.float64(hint),
-            lanes=lanes, iters=iters, use_hint=use_hint,
-            use_kernel=bool(use_kernel), interpret=bool(interpret))
-        tau = float(tau)
-        Xf = np.asarray(Xf)
+        with obs_trace.span("compile" if fresh else "execute", "jax",
+                            tier="noncoop", bucket=Wf.shape[0]):
+            # numpy operands go straight into the jitted call: pjit's C++
+            # dispatch does the host->device transfer far cheaper than an
+            # explicit jnp.asarray per operand (~1 ms/solve at 1024 tenants).
+            tau, Xf = _solve_padded(
+                Wf, m, mask, np.float64(hint),
+                lanes=lanes, iters=iters, use_hint=use_hint,
+                use_kernel=bool(use_kernel), interpret=bool(interpret))
+            tau = float(tau)
+            Xf = np.asarray(Xf)
     X = np.zeros((n, k), dtype=np.float64)
     X[order] = Xf[:n][::-1]
     return tau, X
@@ -280,13 +297,16 @@ def prewarm(n_max: int, k: int, *, lanes: int = LANES, iters: int = ITERS) -> Li
         s *= 2
     sizes.append(bucket(n_max))
     m = np.full(k, 2.0)
-    with x64_scope():
-        for n_pad in sizes:
-            args = (np.ones((n_pad, k)), m, np.ones(n_pad))
-            for use_hint, hint in ((False, -1.0), (True, 0.5)):
-                tau, _ = _solve_padded(
-                    *args, np.float64(hint), lanes=lanes,
-                    iters=iters, use_hint=use_hint, use_kernel=False,
-                    interpret=False)
-                tau.block_until_ready()
+    with obs_trace.span("prewarm", "jax", tier="noncoop", buckets=len(sizes)):
+        with x64_scope():
+            for n_pad in sizes:
+                args = (np.ones((n_pad, k)), m, np.ones(n_pad))
+                for use_hint, hint in ((False, -1.0), (True, 0.5)):
+                    tau, _ = _solve_padded(
+                        *args, np.float64(hint), lanes=lanes,
+                        iters=iters, use_hint=use_hint, use_kernel=False,
+                        interpret=False)
+                    tau.block_until_ready()
+                    _COMPILED.add(((n_pad, k), lanes, iters, use_hint,
+                                   False, False))
     return sizes

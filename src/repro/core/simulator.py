@@ -150,9 +150,9 @@ class ClusterSimulator:
         return np.stack(rows)
 
     def _evaluate(self, active: List[SimTenant], m: Array):
-        import time
+        from ..obs import clock as _obs_clock
 
-        t0 = time.perf_counter()  # repro: noqa[D104] — telemetry only
+        t0 = _obs_clock.wall()  # telemetry only — never feeds decisions
         if self.use_weighted_oef and any(len(t.job_types) > 1 or t.weight != 1.0 for t in active):
             ten = [
                 Tenant(name=t.name, job_types=tuple(t.job_types.values()), weight=t.weight)
@@ -166,7 +166,7 @@ class ClusterSimulator:
             W = self._tenant_rows(active)
             alloc = POLICIES[self.policy_name](W, m)
             ideal, est = alloc.X, alloc.throughput
-        return ideal, est, W, time.perf_counter() - t0  # repro: noqa[D104] — telemetry only
+        return ideal, est, W, _obs_clock.wall() - t0
 
     # -- one scheduling round ------------------------------------------------
     def run(self, max_rounds: int = 10_000) -> SimResult:

@@ -5,17 +5,21 @@ OEF scheduler and emit JSON metrics:
 
     PYTHONPATH=src python -m repro.service --policy oef-coop \\
         --tenants 4 --duration 7200 --seed 0
-    PYTHONPATH=src python -m repro.service --trace trace.csv --policy gavel
+    PYTHONPATH=src python -m repro.service --replay trace.csv --policy gavel
     PYTHONPATH=src python -m repro.service --emit-trace trace.csv --tenants 8
+    PYTHONPATH=src python -m repro.service --trace t.json --metrics m.jsonl
 
 Exit code 0 on a completed replay; the JSON report goes to stdout (or
-``--out``).
+``--out``). ``--trace``/``--metrics`` write observability artifacts (Chrome
+trace JSON for Perfetto, metrics JSONL) readable via
+``python -m repro.obs report`` — see docs/observability.md.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
+from .. import obs
 from ..core import backends
 from .scheduler import OnlineScheduler, SERVICE_POLICIES
 from .traces import (
@@ -31,7 +35,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(prog="python -m repro.service",
                                  description="Online event-driven OEF cluster service")
     ap.add_argument("--policy", choices=SERVICE_POLICIES, default="oef-coop")
-    ap.add_argument("--trace", type=str, default=None,
+    ap.add_argument("--replay", type=str, default=None,
                     help="CSV trace to replay (default: generate a synthetic one)")
     ap.add_argument("--cluster", choices=("paper", "tpu"), default="paper")
     ap.add_argument("--tenants", type=int, default=4, help="synthetic: tenant count")
@@ -72,14 +76,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--out", type=str, default=None, help="write JSON report here")
     ap.add_argument("--emit-trace", type=str, default=None,
                     help="write the (synthetic) trace as CSV and exit")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT.json",
+                    help="record spans and write a Chrome trace_event JSON "
+                         "(load in Perfetto; see docs/observability.md)")
+    ap.add_argument("--metrics", type=str, default=None, metavar="OUT.jsonl",
+                    help="stream per-solve metric samples (counters/gauges/"
+                         "histograms) to a JSONL file")
+    ap.add_argument("--flame", action="store_true",
+                    help="print a text flamegraph summary to stderr "
+                         "(requires --trace)")
     return ap
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     cluster = default_cluster(args.cluster)
-    if args.trace:
-        events = read_trace_csv(args.trace)
+    if args.replay:
+        events = read_trace_csv(args.replay)
     else:
         events = synthetic_trace(
             args.tenants,
@@ -125,13 +138,37 @@ def main(argv=None) -> int:
             solver_backend=args.backend,
             guardrails=not args.no_guardrails,
         )
-    if engine is not None:
-        with engine.installed():
+    tracer = None
+    if args.trace:
+        tracer = obs.Tracer()
+        obs.set_tracer(tracer)
+    sink = None
+    if args.metrics:
+        sink = obs.JsonlSink(args.metrics)
+        obs.set_metrics(obs.MetricsRegistry(sink=sink))
+    try:
+        if engine is not None:
+            with engine.installed():
+                report = sched.run(events, until=args.until, journal=journal)
+        else:
             report = sched.run(events, until=args.until, journal=journal)
-    else:
-        report = sched.run(events, until=args.until, journal=journal)
+    finally:
+        if tracer is not None:
+            obs.set_tracer(None)
+        if sink is not None:
+            obs.set_metrics(None)
+            sink.close()
     if journal is not None:
         journal.close()
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"trace -> {args.trace} ({len(tracer.spans)} spans, "
+              f"{len(tracer.instants)} instants)", file=sys.stderr)
+        if args.flame:
+            print("\n".join(tracer.flame_lines()), file=sys.stderr)
+    if sink is not None:
+        print(f"metrics -> {args.metrics} ({sink.rows_written} samples)",
+              file=sys.stderr)
     text = report.to_json()
     if args.out:
         with open(args.out, "w") as f:

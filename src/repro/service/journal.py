@@ -39,6 +39,7 @@ import numpy as np
 
 from ..core.placement import RoundingPlacer
 from ..core.types import Allocation, ClusterSpec, JobTypeProfile
+from ..obs import trace as obs_trace
 from .events import Event, EventKind, EventQueue, TRACE_KINDS
 from .metrics import MetricsCollector, ServiceReport, SolveRecord
 from .scheduler import OnlineScheduler, ServiceJob, ServiceTenant
@@ -360,21 +361,22 @@ class Journal:
         return self._cursor
 
     def record(self, ev: Event) -> None:
-        line = _dumps_record(event_to_json(ev))
-        if self._cursor < len(self._lines):
-            if self._lines[self._cursor] != line:
-                raise RuntimeError(
-                    f"journal divergence at record {self._cursor}: replaying "
-                    f"{line} over journaled {self._lines[self._cursor]} — "
-                    f"the trace does not match the journaled run")
+        with obs_trace.span("journal/append", "journal"):
+            line = _dumps_record(event_to_json(ev))
+            if self._cursor < len(self._lines):
+                if self._lines[self._cursor] != line:
+                    raise RuntimeError(
+                        f"journal divergence at record {self._cursor}: replaying "
+                        f"{line} over journaled {self._lines[self._cursor]} — "
+                        f"the trace does not match the journaled run")
+                self._cursor += 1
+                return
+            if self._fh is None:
+                self._fh = open(self.path, "a")
+            self._fh.write(line + "\n")
+            self._fh.flush()
+            self._lines.append(line)
             self._cursor += 1
-            return
-        if self._fh is None:
-            self._fh = open(self.path, "a")
-        self._fh.write(line + "\n")
-        self._fh.flush()
-        self._lines.append(line)
-        self._cursor += 1
 
     def events(self, start: int = 0, stop: Optional[int] = None) -> List[Event]:
         return [event_from_json(json.loads(ln))
@@ -397,14 +399,15 @@ class Journal:
                  *, n: Optional[int] = None) -> str:
         """Atomic snapshot at ``n`` applied events (.tmp + os.replace)."""
         n = self._cursor if n is None else n
-        final = self._snap_dir(n)
-        tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        with open(os.path.join(tmp, "state.json"), "w") as f:
-            f.write(_dumps_state(scheduler_state(sched, queue, n)))
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)
+        with obs_trace.span("journal/snapshot", "journal", n=n):
+            final = self._snap_dir(n)
+            tmp = final + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            with open(os.path.join(tmp, "state.json"), "w") as f:
+                f.write(_dumps_state(scheduler_state(sched, queue, n)))
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
         return final
 
     def load_snapshot(self, n: int) -> Dict[str, object]:
@@ -449,21 +452,22 @@ def recover_scheduler(directory: str,
     ``journal.events(snapshot_n) + trace[n_applied:]`` back through
     ``sched.run(..., journal=journal)`` — or call :func:`resume_scheduler`.
     """
-    journal = Journal(directory, snapshot_every=snapshot_every)
-    snaps = journal.available_snapshots()
-    if not snaps:
-        raise FileNotFoundError(f"no snapshots under {directory!r}")
-    snap_n = snaps[-1]
-    if snap_n > journal.n_recorded:
-        raise RuntimeError(
-            f"snapshot {snap_n} is ahead of the journal "
-            f"({journal.n_recorded} records) — directory corrupt")
-    state = journal.load_snapshot(snap_n)
-    sched = restore_scheduler(state)
-    journal._cursor = snap_n  # tail records snap_n.. replay in verify mode
-    journal.pending_internals = [
-        event_from_json(d) for d in state["internals"]]
-    return sched, journal, journal.n_recorded
+    with obs_trace.span("journal/recover", "journal"):
+        journal = Journal(directory, snapshot_every=snapshot_every)
+        snaps = journal.available_snapshots()
+        if not snaps:
+            raise FileNotFoundError(f"no snapshots under {directory!r}")
+        snap_n = snaps[-1]
+        if snap_n > journal.n_recorded:
+            raise RuntimeError(
+                f"snapshot {snap_n} is ahead of the journal "
+                f"({journal.n_recorded} records) — directory corrupt")
+        state = journal.load_snapshot(snap_n)
+        sched = restore_scheduler(state)
+        journal._cursor = snap_n  # tail records snap_n.. replay in verify mode
+        journal.pending_internals = [
+            event_from_json(d) for d in state["internals"]]
+        return sched, journal, journal.n_recorded
 
 
 def resume_scheduler(directory: str, events: Sequence[Event],

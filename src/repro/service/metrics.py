@@ -19,12 +19,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-
-def _count(items) -> Dict[str, int]:
-    out: Dict[str, int] = {}
-    for it in items:
-        out[it] = out.get(it, 0) + 1
-    return out
+from ..obs import json_safe, tally
 
 
 @dataclasses.dataclass
@@ -80,7 +75,11 @@ class ServiceReport:
     anomalies: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def to_json(self, indent: Optional[int] = 2) -> str:
-        return json.dumps(dataclasses.asdict(self), indent=indent, sort_keys=True)
+        # json_safe: audits and steady_state_estimate can carry numpy
+        # scalars (np.float64 / np.int64 / np.bool_) nested arbitrarily
+        # deep — json.dumps rejects them without recursive coercion.
+        return json.dumps(json_safe(dataclasses.asdict(self)),
+                          indent=indent, sort_keys=True)
 
 
 class MetricsCollector:
@@ -137,8 +136,9 @@ class MetricsCollector:
         self.anomalies[kind] = self.anomalies.get(kind, 0) + 1
 
     def on_audit(self, time: float, report: Dict[str, object]) -> None:
-        self.audits.append({"time": time, **{k: (bool(v) if isinstance(v, np.bool_) else v)
-                                             for k, v in report.items()}})
+        # sanitize at ingestion (not just in to_json) so journal snapshots
+        # of the audit log serialize identically before and after recovery
+        self.audits.append(json_safe({"time": time, **report}))
 
     # -- final report -------------------------------------------------------
     def report(self, *, policy: str, horizon_s: float, jobs_unfinished: int,
@@ -161,9 +161,9 @@ class MetricsCollector:
             n_solves=len(self.solves),
             n_reused_solves=sum(1 for s in self.solves if s.reused),
             fallback_count=sum(1 for s in self.solves if s.fallback_reason),
-            fallback_reasons=_count(s.fallback_reason for s in self.solves
-                                    if s.fallback_reason),
-            solver_backends=_count(s.backend for s in self.solves if s.backend),
+            fallback_reasons=tally(s.fallback_reason for s in self.solves
+                                   if s.fallback_reason),
+            solver_backends=tally(s.backend for s in self.solves if s.backend),
             jobs_finished=len(self.jcts),
             jobs_unfinished=jobs_unfinished,
             mean_jct_s=float(jct_vals.mean()) if jct_vals.size else 0.0,

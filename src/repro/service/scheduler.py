@@ -32,12 +32,14 @@ from __future__ import annotations
 import copy
 import dataclasses
 import math
-import time as _time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from ..core import backends, baselines, oef, properties
+from ..obs import clock as _obs_clock
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..core.placement import JobRequest, RoundingPlacer
 from ..core.simulator import SimTenant
 from ..core.types import Allocation, ClusterSpec, JobTypeProfile, Tenant
@@ -49,6 +51,10 @@ Array = np.ndarray
 OEF_POLICIES = ("oef-noncoop", "oef-coop", "efficiency-only")
 BASELINE_POLICIES = ("max-min", "gavel", "gandiva-fair")
 SERVICE_POLICIES = OEF_POLICIES + BASELINE_POLICIES
+
+#: span labels for the event loop, precomputed so the per-event trace site
+#: does no string work.
+_EVENT_LABELS = {kind: "event/" + kind.value for kind in EventKind}
 
 
 @dataclasses.dataclass
@@ -227,27 +233,56 @@ class OnlineScheduler:
             for ev in journal.take_restored_internals():
                 queue.push(ev)
             journal.ensure_initial(self, queue)
-        while True:
-            if not queue:
-                if self._dirty:
-                    # e.g. the last popped event was a stale finish: solve so
-                    # runnable jobs get rates (may push new finish events).
-                    self._resolve(self._clock, queue)
-                    continue
-                break
-            ev = queue.pop()
-            if until is not None and ev.time > until:
-                self._advance(until)
-                self._clock = until
-                break
-            external = ev.kind in TRACE_KINDS
-            if journal is not None and external:
-                journal.record(ev)  # write-ahead: journal, then apply
-            self._advance(ev.time)
-            self._clock = max(self._clock, ev.time)
-            self._handle(ev, queue)
-            if journal is not None and external:
-                journal.maybe_snapshot(self, queue)
+        tracer = obs_trace.get_tracer()
+        if tracer is not None:
+            tracer.set_sim_clock(lambda: self._clock)
+            _begin, _end = tracer.begin, tracer.end
+        try:
+            while True:
+                if not queue:
+                    if self._dirty:
+                        # e.g. the last popped event was a stale finish: solve
+                        # so runnable jobs get rates (may push finish events).
+                        self._resolve(self._clock, queue)
+                        continue
+                    break
+                ev = queue.pop()
+                if until is not None and ev.time > until:
+                    self._advance(until)
+                    self._clock = until
+                    break
+                external = ev.kind in TRACE_KINDS
+                if journal is not None and external:
+                    journal.record(ev)  # write-ahead: journal, then apply
+                self._advance(ev.time)
+                self._clock = max(self._clock, ev.time)
+                if tracer is None:
+                    self._handle(ev, queue)
+                elif (ev.kind is EventKind.JOB_FINISH
+                      and self._finish_is_stale(ev)):
+                    # Stale predicted finishes dominate pops (every re-solve
+                    # invalidates the predictions queued by the previous one)
+                    # and their handling is a cheap early return; tally them
+                    # instead of recording thousands of near-zero spans.
+                    # Staleness is deterministic, so the span set stays
+                    # replay-stable.
+                    tracer.bump("event/job_finish:stale")
+                    self._handle(ev, queue)
+                else:
+                    # begin/end (not span()): this is the per-event hot path
+                    # and the context-manager machinery would roughly double
+                    # the enabled tracing cost (see benchmarks/obs_overhead).
+                    tok = _begin(_EVENT_LABELS[ev.kind], "service",
+                                 self._clock)
+                    try:
+                        self._handle(ev, queue)
+                    finally:
+                        _end(tok)
+                if journal is not None and external:
+                    journal.maybe_snapshot(self, queue)
+        finally:
+            if tracer is not None:
+                tracer.set_sim_clock(None)
         unfinished = sum(1 for j in self.jobs.values() if not j.finished)
         horizon = until if until is not None else self._clock
         return self.metrics.report(
@@ -281,16 +316,24 @@ class OnlineScheduler:
     # ------------------------------------------------------------------
     # event handling
     # ------------------------------------------------------------------
+    def _finish_is_stale(self, ev: Event) -> bool:
+        """A predicted JOB_FINISH is stale when its job is gone, already
+        finished, or was re-planned since (version bump). Deterministic —
+        the trace elision in ``_run`` relies on that."""
+        job = self.jobs.get(ev.job_id)
+        return (job is None or job.finished
+                or job.version != ev.payload.get("version"))
+
     def _handle(self, ev: Event, queue: EventQueue) -> None:
         k = ev.kind
         if k == EventKind.JOB_FINISH:
-            job = self.jobs.get(ev.job_id)
-            if job is None or job.finished or job.version != ev.payload.get("version"):
+            if self._finish_is_stale(ev):
                 # stale prediction — but it may have been the same-instant
                 # event that deferred an earlier dirty batch: give the
                 # throttle a chance to fire now
                 self._maybe_resolve(ev.time, queue)
                 return
+            job = self.jobs[ev.job_id]
             remaining = job.total_work - job.done
             if remaining > 1e-6 * max(job.total_work, 1.0) + 1e-9:
                 # drift (e.g. migration stall pushed the finish out): re-predict
@@ -476,6 +519,9 @@ class OnlineScheduler:
             self._resolve(now, queue)
         elif not self._resolve_pending:
             self._resolve_pending = True
+            obs_trace.instant("dirty/defer", "service",
+                              pending=self._dirty_count,
+                              fire_at=self._next_solve_ok)
             queue.push(Event(self._next_solve_ok, EventKind.RESOLVE))
 
     # ------------------------------------------------------------------
@@ -576,103 +622,158 @@ class OnlineScheduler:
             return
         m_eff = self._effective_capacity()
 
-        t0 = _time.perf_counter()  # repro: noqa[D104] — telemetry only
-        degraded = False
-        try:
-            ideal, est, W, reused = self._solve_allocation(active, m_eff)
-            if not reused:
-                meta = self._prev_alloc.meta if self._prev_alloc is not None else {}
-                degraded = bool(meta.get("degraded", False))
-            self._last_good = (tuple(t.name for t in active), ideal, est)
-        except Exception:
-            # the floor of the ladder: every solver tier failed (or guardrails
-            # are off and something raised) — fall back to the last-known-good
-            # allocation rather than killing the event loop.
-            if not self.guardrails:
-                raise
-            ideal, est, W = self._fallback_allocation(active, m_eff)
-            reused = False
-            degraded = True
-            floored = True
-        else:
-            floored = False
-        solver_s = _time.perf_counter() - t0  # repro: noqa[D104] — telemetry only
+        with obs_trace.span("resolve", "service", dirty=dirty_batch,
+                            tenants=len(active)):
+            t0 = _obs_clock.wall()
+            degraded = False
+            try:
+                with obs_trace.span("solve", "service"):
+                    ideal, est, W, reused = self._solve_allocation(active, m_eff)
+                if not reused:
+                    meta = self._prev_alloc.meta if self._prev_alloc is not None else {}
+                    degraded = bool(meta.get("degraded", False))
+                self._last_good = (tuple(t.name for t in active), ideal, est)
+            except Exception:
+                # the floor of the ladder: every solver tier failed (or
+                # guardrails are off and something raised) — fall back to the
+                # last-known-good allocation rather than killing the event loop.
+                if not self.guardrails:
+                    raise
+                obs_trace.instant("guardrail/floor", "guardrail")
+                ideal, est, W = self._fallback_allocation(active, m_eff)
+                reused = False
+                degraded = True
+                floored = True
+            else:
+                floored = False
+            solver_s = _obs_clock.wall() - t0
 
-        key = tuple(t.name for t in active)
-        if self._placer is None or self._placer_key != key:
-            self._placer = RoundingPlacer(len(active), self.cluster.m, self.devices_per_host)
-            self._placer_key = key
-        min_dem = np.array([min(jt.min_demand for jt in t.job_types.values()) for t in active])
-        real = self._placer.round_shares(ideal, min_dem, capacity=m_eff)
+            with obs_trace.span("placement", "service"):
+                key = tuple(t.name for t in active)
+                if self._placer is None or self._placer_key != key:
+                    self._placer = RoundingPlacer(len(active), self.cluster.m,
+                                                  self.devices_per_host)
+                    self._placer_key = key
+                min_dem = np.array([min(jt.min_demand for jt in t.job_types.values())
+                                    for t in active])
+                real = self._placer.round_shares(ideal, min_dem, capacity=m_eff)
 
-        reqs: List[JobRequest] = []
-        tenant_jobs: Dict[str, List[ServiceJob]] = {}
-        for job in self.jobs.values():
-            if not job.finished and job.submit_time <= now:
-                tenant_jobs.setdefault(job.tenant, []).append(job)
-        for ui, t in enumerate(active):
-            budget = int(real[ui].sum())
-            for job in sorted(tenant_jobs.get(t.name, []),
-                              key=lambda j: (-j.starvation, j.job_id)):
-                if budget < job.workers:
-                    job.starvation += 1
-                    continue
-                budget -= job.workers
-                reqs.append(JobRequest(user=ui, job_id=job.job_id, workers=job.workers,
-                                       starvation=job.starvation))
-        placement = self._placer.place(real, reqs, naive=self.naive_placement,
-                                       prev=self._prev_assignments,
-                                       down_hosts=self.down_hosts)
-        self._prev_assignments = placement.assignments
+                reqs: List[JobRequest] = []
+                tenant_jobs: Dict[str, List[ServiceJob]] = {}
+                for job in self.jobs.values():
+                    if not job.finished and job.submit_time <= now:
+                        tenant_jobs.setdefault(job.tenant, []).append(job)
+                for ui, t in enumerate(active):
+                    budget = int(real[ui].sum())
+                    for job in sorted(tenant_jobs.get(t.name, []),
+                                      key=lambda j: (-j.starvation, j.job_id)):
+                        if budget < job.workers:
+                            job.starvation += 1
+                            continue
+                        budget -= job.workers
+                        reqs.append(JobRequest(user=ui, job_id=job.job_id,
+                                               workers=job.workers,
+                                               starvation=job.starvation))
+                placement = self._placer.place(real, reqs, naive=self.naive_placement,
+                                               prev=self._prev_assignments,
+                                               down_hosts=self.down_hosts)
+                self._prev_assignments = placement.assignments
 
-        # -- convert placements into continuous rates + predicted finishes --
-        placed_ids = frozenset(sorted(placement.assignments))
-        req_ids = {r.job_id for r in reqs}
-        for ui, t in enumerate(active):
-            for job in tenant_jobs.get(t.name, []):
-                if job.job_id not in placed_ids:
-                    if job.job_id in req_ids:
-                        # requested but rejected by the packer (fragmentation,
-                        # failed hosts): age it like the budget-skipped jobs
-                        # so its priority rises (matches the round simulator)
-                        job.starvation += 1
-                    if job.rate > 0 or job.assignment is not None:
-                        job.version += 1  # invalidate stale finish predictions
-                    job.rate = 0.0
-                    continue
-                assignment = tuple(sorted(placement.assignments[job.job_id]))
-                w = t.job_types[job.job_type].speedup_vec()
-                migrated = job.assignment is not None and job.assignment != assignment
-                job.version += 1
-                job.assignment = assignment
-                job.rate = self._job_rate(assignment, w)
-                # never refund an in-progress migration stall: a re-solve that
-                # keeps the assignment must not pull resume_at back to `now`
-                job.resume_at = max(job.resume_at,
-                                    now + (self.migration_overhead_s if migrated else 0.0))
-                job.starvation = 0.0
-                if job.first_scheduled is None:
-                    job.first_scheduled = now
-                    self.metrics.on_first_scheduled(job.job_id, job.submit_time, now)
-                if job.rate > 0:
-                    t_fin = job.resume_at + (job.total_work - job.done) / job.rate
-                    queue.push(Event(t_fin, EventKind.JOB_FINISH, tenant=job.tenant,
-                                     job_id=job.job_id, payload={"version": job.version}))
+            # -- convert placements into continuous rates + predicted finishes --
+            placed_ids = frozenset(sorted(placement.assignments))
+            req_ids = {r.job_id for r in reqs}
+            for ui, t in enumerate(active):
+                for job in tenant_jobs.get(t.name, []):
+                    if job.job_id not in placed_ids:
+                        if job.job_id in req_ids:
+                            # requested but rejected by the packer (fragmentation,
+                            # failed hosts): age it like the budget-skipped jobs
+                            # so its priority rises (matches the round simulator)
+                            job.starvation += 1
+                        if job.rate > 0 or job.assignment is not None:
+                            job.version += 1  # invalidate stale finish predictions
+                        job.rate = 0.0
+                        continue
+                    assignment = tuple(sorted(placement.assignments[job.job_id]))
+                    w = t.job_types[job.job_type].speedup_vec()
+                    migrated = job.assignment is not None and job.assignment != assignment
+                    job.version += 1
+                    job.assignment = assignment
+                    job.rate = self._job_rate(assignment, w)
+                    # never refund an in-progress migration stall: a re-solve that
+                    # keeps the assignment must not pull resume_at back to `now`
+                    job.resume_at = max(job.resume_at,
+                                        now + (self.migration_overhead_s if migrated else 0.0))
+                    job.starvation = 0.0
+                    if job.first_scheduled is None:
+                        job.first_scheduled = now
+                        self.metrics.on_first_scheduled(job.job_id, job.submit_time, now)
+                    if job.rate > 0:
+                        t_fin = job.resume_at + (job.total_work - job.done) / job.rate
+                        queue.push(Event(t_fin, EventKind.JOB_FINISH, tenant=job.tenant,
+                                         job_id=job.job_id, payload={"version": job.version}))
 
-        self._running_jobs = [j for j in self.jobs.values()
-                              if not j.finished and j.rate > 0]
-        self._n_solves += 1
-        self.last_estimate = {t.name: float(e) for t, e in zip(active, est)}
-        meta = ({} if floored else
-                self._prev_alloc.meta if self._prev_alloc is not None else {})
-        self.metrics.on_solve(SolveRecord(
-            time=now, n_tenants=len(active), latency_s=solver_s, reused=reused,
-            dirty_events=dirty_batch, policy=self.policy,
-            backend="last-known-good" if floored else str(meta.get("backend", "")),
-            fallback_reason=meta.get("fallback_reason"),
-            degraded=degraded, quarantined=len(self.quarantined)))
-        if self.audit_every > 0 and self._n_solves % self.audit_every == 0:
-            self.metrics.on_audit(now, properties.property_report(W, ideal, m_eff))
+            self._running_jobs = [j for j in self.jobs.values()
+                                  if not j.finished and j.rate > 0]
+            self._n_solves += 1
+            self.last_estimate = {t.name: float(e) for t, e in zip(active, est)}
+            meta = ({} if floored else
+                    self._prev_alloc.meta if self._prev_alloc is not None else {})
+            backend_name = ("last-known-good" if floored
+                            else str(meta.get("backend", "")))
+            fallback_reason = meta.get("fallback_reason")
+            self.metrics.on_solve(SolveRecord(
+                time=now, n_tenants=len(active), latency_s=solver_s, reused=reused,
+                dirty_events=dirty_batch, policy=self.policy,
+                backend=backend_name,
+                fallback_reason=fallback_reason,
+                degraded=degraded, quarantined=len(self.quarantined)))
+            audit = None
+            if self.audit_every > 0 and self._n_solves % self.audit_every == 0:
+                audit = properties.property_report(W, ideal, m_eff)
+                self.metrics.on_audit(now, audit)
+
+        reg = obs_metrics.get_metrics()
+        if reg is not None:
+            self._emit_metrics(reg, now, queue, solver_s=solver_s,
+                               backend=backend_name, reused=reused,
+                               degraded=degraded, floored=floored,
+                               fallback=fallback_reason is not None,
+                               n_active=len(active), audit=audit)
+
+    def _emit_metrics(self, reg, now: float, queue: EventQueue, *,
+                      solver_s: float, backend: str, reused: bool,
+                      degraded: bool, floored: bool, fallback: bool,
+                      n_active: int, audit: Optional[Dict[str, object]]) -> None:
+        """Refresh the obs instruments and emit one time-series sample.
+
+        Called once per re-solve (the control plane's natural heartbeat), so
+        every sample row reflects a consistent post-solve state at sim-time
+        ``now``."""
+        reg.counter("service.solves").inc()
+        if reused:
+            reg.counter("service.reused_solves").inc()
+        if degraded:
+            reg.counter("service.degraded_solves").inc()
+        if floored:
+            reg.counter("service.floored_solves").inc()
+        if fallback:
+            reg.counter("service.fallbacks").inc()
+        reg.gauge("service.queue_depth", "events").set(len(queue))
+        reg.gauge("service.quarantine_size", "tenants").set(len(self.quarantined))
+        reg.gauge("service.active_tenants", "tenants").set(n_active)
+        reg.gauge("service.down_hosts", "hosts").set(len(self.down_hosts))
+        if not reused:
+            reg.histogram(
+                "service.solve_latency_ms." + (backend or "default")
+            ).observe(solver_s * 1e3)
+        if audit is not None:
+            reg.counter("service.audits").inc()
+            reg.gauge("fairness.max_envy").set(float(audit["max_envy"]))
+            reg.gauge("fairness.total_efficiency").set(
+                float(audit["total_efficiency"]))
+            reg.gauge("fairness.min_si_slack").set(float(audit["min_si_slack"]))
+        reg.sample(now)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,4 @@
+"""Fixture: exactly one C306 (wall-clock module imported in the control
+plane instead of routing through repro.obs.clock). No call sites, so D104
+stays silent."""
+import time as _t  # C306

@@ -1,5 +1,5 @@
 """Fixture: exactly one D104 (wall-clock read in control-plane code)."""
-import time
+import time  # repro: noqa[C306] (this fixture targets D104 only)
 
 
 def stamp_event(event):

@@ -38,6 +38,7 @@ FIXTURE_CASES = [
     ("c303_bare_assert.py", "C303"),
     ("c304_unregistered_backend.py", "C304"),
     ("c305_swallowed_exception.py", "C305"),
+    ("c306_wall_clock_import.py", "C306"),
 ]
 
 
@@ -113,17 +114,20 @@ def _write(tmp_path, body):
 
 
 def test_noqa_with_matching_rule_suppresses(tmp_path):
-    path = _write(tmp_path, "import time\nnow = time.time()  # repro: noqa[D104]\n")
+    path = _write(tmp_path, "import time  # repro: noqa[C306]\n"
+                            "now = time.time()  # repro: noqa[D104]\n")
     assert analyze_file(path, all_rules()) == []
 
 
 def test_noqa_with_wrong_rule_does_not_suppress(tmp_path):
-    path = _write(tmp_path, "import time\nnow = time.time()  # repro: noqa[D101]\n")
+    path = _write(tmp_path, "import time  # repro: noqa[C306]\n"
+                            "now = time.time()  # repro: noqa[D101]\n")
     assert [f.rule for f in analyze_file(path, all_rules())] == ["D104"]
 
 
 def test_bare_noqa_suppresses_everything_on_line(tmp_path):
-    path = _write(tmp_path, "import time\nnow = time.time()  # repro: noqa\n")
+    path = _write(tmp_path, "import time  # repro: noqa[C306]\n"
+                            "now = time.time()  # repro: noqa\n")
     assert analyze_file(path, all_rules()) == []
 
 
@@ -138,7 +142,7 @@ def test_baseline_roundtrip_suppresses_known_findings(tmp_path):
 
 def test_baseline_is_a_ratchet_not_a_blanket(tmp_path):
     # Baseline one D104; a second one in the same file must still be new.
-    path = _write(tmp_path, "import time\na = time.time()\n")
+    path = _write(tmp_path, "import time  # repro: noqa[C306]\na = time.time()\n")
     first = analyze_file(path, all_rules())
     baseline_path = tmp_path / "baseline.txt"
     write_baseline(str(baseline_path), first)
